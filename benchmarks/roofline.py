@@ -1,0 +1,325 @@
+"""Roofline analysis: three terms per (arch x shape x mesh).
+
+Terms (seconds, per §ROOFLINE):
+  compute    = FLOPs / (chips * 197e12)          [bf16 peak, v5e]
+  memory     = HBM bytes / (chips * 819e9)
+  collective = per-chip ICI link bytes / 50e9
+
+FLOP/byte accounting is ANALYTIC, derived from the model configs and the
+exact structure of the compiled step (which attention path is taken, remat
+policy, FL-protocol extras), because XLA's ``cost_analysis()`` counts
+while-loop bodies (our layer scans) exactly once — verified experimentally,
+see EXPERIMENTS.md §Dry-run. The dry-run JSONs supply exact param counts
+and the HLO-level numbers for cross-checking; the analytic model is
+validated against cost_analysis on 2-layer unrolled variants (test suite).
+
+Conventions:
+* all-reduce over g devices (ring): per-chip link bytes = 2*(g-1)/g * payload
+* all-gather / reduce-scatter: (g-1)/g * payload
+* "payload" = the full logical tensor for TP collectives; params-shard for
+  the data-axis delta psum.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import INPUT_SHAPES, FLConfig, ModelConfig
+from repro.configs.registry import get_arch, list_archs
+from repro.launch.program import DRYRUN_FL, PROBE_BATCH, resolve_model_cfg
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / link
+FULL_ATTN_MAX_SEQ = 4096
+Q_CHUNK = 512
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+@dataclasses.dataclass
+class MeshSpec:
+    chips: int
+    model: int = 16
+    data: int = 16
+    pods: int = 1
+
+    @property
+    def dp(self):
+        return self.data * self.pods
+
+
+SINGLE = MeshSpec(chips=256)
+MULTI = MeshSpec(chips=512, pods=2)
+
+
+def _param_count(arch_id: str) -> int:
+    for f in glob.glob(os.path.join(DRYRUN_DIR, f"{arch_id}_*_single.json")):
+        r = json.load(open(f))
+        if r.get("ok") and r.get("meta"):
+            return int(r["meta"]["params"])
+    raise FileNotFoundError(f"no dryrun meta for {arch_id}")
+
+
+def _active_ratio(cfg: ModelConfig) -> float:
+    """Fraction of (non-embedding) params active per token (MoE top-k)."""
+    if not cfg.is_moe:
+        return 1.0
+    d, dff, e, k = cfg.d_model, cfg.resolved_moe_d_ff, cfg.num_experts, cfg.experts_per_token
+    routed = 3 * d * dff * e * cfg.num_layers
+    active_routed = routed * k / e
+    # everything else is always active — compute the rest from a param count
+    return None  # handled explicitly in flops_per_token
+
+
+def _embed_params(cfg: ModelConfig) -> int:
+    n = cfg.vocab_size * cfg.d_model
+    if not cfg.tie_embeddings:
+        n *= 2
+    return n
+
+
+def flops_per_token_fwd(cfg: ModelConfig, seq: int, window: Optional[int],
+                        params: int, with_logits: bool = True) -> float:
+    """Forward FLOPs per token: 2*(active matmul params) + attention maths.
+
+    Matmul params = total - embeddings (gather is free; LM head counted via
+    with_logits) - inactive experts.
+    """
+    body = params - _embed_params(cfg)
+    if cfg.is_moe:
+        routed = 3 * cfg.d_model * cfg.resolved_moe_d_ff * cfg.num_experts \
+            * cfg.num_layers
+        body = body - routed + routed * cfg.experts_per_token / cfg.num_experts
+    f = 2.0 * body
+    if with_logits:
+        f += 2.0 * cfg.d_model * cfg.vocab_size
+    # attention score/AV maths per token per layer: 4 * S_eff * H * hd
+    if cfg.num_heads:
+        s_eff = seq
+        w = window if window is not None else cfg.attn_window
+        if w:
+            s_eff = min(w + min(Q_CHUNK, seq), seq)
+        # our compiled paths compute the full (masked) range — no causal skip
+        f += cfg.num_layers * 4.0 * s_eff * cfg.num_heads * cfg.resolved_head_dim
+    if cfg.ssm_state:
+        di, n = cfg.ssm_d_inner, cfg.ssm_state
+        f += cfg.num_layers * 10.0 * di * n  # discretise+scan+readout, f32
+    if cfg.is_encdec:
+        # encoder runs once per sequence: amortise per decoded token
+        enc_body = 2.0 * (params // 3)  # encoder ~ same layer cost, L_enc
+        f += enc_body * cfg.encoder_seq_len / max(seq, 1) * 0  # counted in seq pass
+    return f
+
+
+def attention_bytes_per_token(cfg: ModelConfig, seq: int,
+                              window: Optional[int],
+                              flash: bool = False) -> float:
+    """HBM traffic of the attention maths per token per layer (bf16/f32).
+
+    XLA paths (baseline): scores materialised in f32 -> ~4 passes over the
+    (S_eff) score row per token (write, softmax r+w, AV read); chunked/SWA
+    same asymptotics over the banded range.
+    Pallas flash kernel: scores live in VMEM — HBM traffic collapses to the
+    K/V stream, amortised over the q-block: 2 tensors * Hkv * hd * bf16 *
+    S_eff / block_q per token.
+    """
+    if not cfg.num_heads:
+        return 0.0
+    s_eff = seq
+    w = window if window is not None else cfg.attn_window
+    if w:
+        s_eff = min(w + min(Q_CHUNK, seq), seq)
+    if flash:
+        kv_stream = 2 * cfg.num_kv_heads * cfg.resolved_head_dim * 2
+        return cfg.num_layers * kv_stream * s_eff / 128.0  # block_q = 128
+    return cfg.num_layers * cfg.num_heads * s_eff * 4.0 * 4  # bytes
+
+
+def analyze(arch_id: str, shape_name: str, mesh: MeshSpec,
+            fl: FLConfig = DRYRUN_FL,
+            overrides: Optional[Dict] = None,
+            flash_attn: bool = False) -> Optional[Dict]:
+    """Analytic roofline record for one (arch, shape, mesh)."""
+    arch = get_arch(arch_id)
+    if shape_name in arch.skip_shapes:
+        return None
+    shape = INPUT_SHAPES[shape_name]
+    cfg = resolve_model_cfg(arch, shape_name)
+    if overrides:
+        cfg = cfg.replace(**{k: v for k, v in overrides.items()
+                             if hasattr(cfg, k)})
+    params = _param_count(arch_id)
+    pbytes = params * 2  # bf16
+    window = cfg.attn_window
+    dist_mode = arch.fl_mode == "distributed"
+
+    chips = mesh.chips
+    tp = mesh.model
+    dp = mesh.dp
+
+    text_seq = shape.seq_len - (cfg.num_patches or 0)
+    f_tok = flops_per_token_fwd(cfg, shape.seq_len, window, params)
+
+    coll = {}
+    if shape.kind == "train":
+        m = fl.local_steps
+        cohort = dp if not dist_mode else 1
+        local_tokens = shape.global_batch * text_seq * m
+        probe_tokens = PROBE_BATCH * (dp if not dist_mode else dp) * text_seq
+        # fwd + 2x bwd + remat re-fwd
+        flops = 4.0 * f_tok * local_tokens + 1.0 * f_tok * probe_tokens
+        # FL-protocol elementwise passes (distances, weighted agg, resync)
+        flops += (6.0 if not dist_mode else 3.0) * params * (cohort if not dist_mode else 1)
+
+        # ---- memory (per chip) ----
+        group_chips = tp if not dist_mode else chips
+        params_local = pbytes / group_chips
+        tokens_chip = local_tokens / chips
+        w_traffic = 4.0 * params_local * m  # fwd+bwd+remat reads + delta write
+        act_traffic = tokens_chip * cfg.d_model * (cfg.num_layers or 1) * 24.0
+        attn_traffic = tokens_chip * attention_bytes_per_token(
+            cfg, shape.seq_len, window, flash=flash_attn) * 3.0
+        fl_traffic = (8.0 if not dist_mode else 4.0) * params_local
+        mem_bytes = w_traffic + act_traffic + attn_traffic + fl_traffic
+
+        # ---- collectives ----
+        # TP all-reduces: ~2 per layer per pass, 3 passes (fwd,bwd,remat-fwd is
+        # local) -> 4 ARs/layer counting fwd+bwd; payload = tokens_group * d.
+        # In distributed-client mode each data row TP-reduces only its own
+        # batch shard (tokens / dp).
+        tokens_group = local_tokens / (cohort if not dist_mode else dp)
+        ar_payload = tokens_group * cfg.d_model * 2
+        n_ar = (cfg.num_layers or 1) * 4
+        coll["tp_allreduce"] = n_ar * 2 * (tp - 1) / tp * ar_payload / tp
+        if cfg.is_moe:
+            # all-to-all there+back, fwd+bwd: 4x routed activations
+            a2a = 4.0 * cfg.experts_per_token * tokens_group * cfg.d_model * 2
+            coll["moe_all_to_all"] = a2a * (tp - 1) / tp / tp
+        if dist_mode:
+            # FSDP: all-gather params each pass (3x) + reduce-scatter grads
+            ag = 3.0 * m * pbytes * (dp - 1) / dp / tp
+            rs = 1.0 * m * pbytes * 2 * (dp - 1) / dp / tp  # f32 grads
+            coll["fsdp_ag_rs"] = ag + rs
+        else:
+            # delta psum over data axis: params-shard payload per group
+            coll["delta_psum"] = 2 * (dp - 1) / dp * (pbytes / tp)
+        per_chip_link = sum(coll.values())
+
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * text_seq
+        flops = f_tok * tokens  # fwd only (last-token logits ~free)
+        tokens_chip = tokens / chips
+        params_local = pbytes / (chips if dist_mode else tp)
+        mem_bytes = (params_local + tokens_chip * cfg.d_model *
+                     (cfg.num_layers or 1) * 16.0 +
+                     tokens_chip * attention_bytes_per_token(
+                         cfg, shape.seq_len, window, flash=flash_attn))
+        tokens_group = tokens / dp
+        ar_payload = tokens_group * cfg.d_model * 2
+        coll["tp_allreduce"] = (cfg.num_layers or 1) * 2 * 2 * (tp - 1) / tp * ar_payload / tp
+        if cfg.is_moe:
+            coll["moe_all_to_all"] = (2.0 * cfg.experts_per_token * tokens_group
+                                      * cfg.d_model * 2) * (tp - 1) / tp / tp
+        if dist_mode:
+            coll["fsdp_ag"] = pbytes * (dp - 1) / dp / tp
+        per_chip_link = sum(coll.values())
+
+    else:  # decode
+        b = shape.global_batch
+        cache_len = min(shape.seq_len, window or shape.seq_len)
+        f_tok_dec = flops_per_token_fwd(cfg, cache_len, window, params)
+        flops = f_tok_dec * b
+        # memory: weights + KV cache read dominate
+        params_local = pbytes / (chips if dist_mode else tp)
+        if cfg.num_heads:
+            kv_bytes = (cfg.num_layers * 2 * b * cache_len *
+                        cfg.num_kv_heads * cfg.resolved_head_dim * 2)
+        else:
+            kv_bytes = 0
+        if cfg.ssm_state:
+            kv_bytes += cfg.num_layers * b * cfg.ssm_d_inner * (cfg.ssm_state * 4 + (cfg.ssm_conv - 1) * 2)
+        if cfg.is_encdec:
+            kv_bytes += (cfg.num_layers * 2 * b * cfg.encoder_seq_len *
+                         cfg.num_kv_heads * cfg.resolved_head_dim * 2)
+        mem_bytes = params_local + kv_bytes / chips
+        ar_payload = b * cfg.d_model * 2
+        coll["tp_allreduce"] = (cfg.num_layers or 1) * 2 * 2 * (tp - 1) / tp * ar_payload / tp
+        if cfg.is_moe:
+            coll["moe_all_to_all"] = (2.0 * cfg.experts_per_token * b *
+                                      cfg.d_model * 2) * (tp - 1) / tp / tp
+        if dist_mode:
+            coll["fsdp_ag"] = pbytes * (dp - 1) / dp / tp
+        per_chip_link = sum(coll.values())
+
+    t_compute = flops / (chips * PEAK_FLOPS)
+    t_memory = mem_bytes / HBM_BW
+    t_coll = per_chip_link / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    step_time = max(terms.values())
+
+    # MODEL_FLOPS: 6*N*D (train) / 2*N_active*D (inference) over the same data
+    if shape.kind == "train":
+        n_act = _param_count_active(cfg, params)
+        model_flops = 6.0 * n_act * shape.global_batch * text_seq * fl.local_steps
+    elif shape.kind == "prefill":
+        n_act = _param_count_active(cfg, params)
+        model_flops = 2.0 * n_act * shape.global_batch * text_seq
+    else:
+        n_act = _param_count_active(cfg, params)
+        model_flops = 2.0 * n_act * shape.global_batch
+    useful = model_flops / flops if flops else 0.0
+
+    return {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": f"{mesh.pods}x16x16" if mesh.pods > 1 else "16x16",
+        "params": params,
+        "flops": flops, "hbm_bytes": mem_bytes, "link_bytes": per_chip_link,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "step_time_s": step_time,
+        "model_flops": model_flops, "useful_ratio": useful,
+        "collectives": coll,
+        "roofline_frac": t_compute / step_time if step_time else 0.0,
+    }
+
+
+def _param_count_active(cfg: ModelConfig, params: int) -> float:
+    if not cfg.is_moe:
+        return params
+    routed = 3 * cfg.d_model * cfg.resolved_moe_d_ff * cfg.num_experts * cfg.num_layers
+    return params - routed + routed * cfg.experts_per_token / cfg.num_experts
+
+
+def full_table(mesh: MeshSpec = SINGLE):
+    rows = []
+    for a in list_archs():
+        for s in INPUT_SHAPES:
+            r = analyze(a, s, mesh)
+            if r:
+                rows.append(r)
+    return rows
+
+
+def hlo_record(arch_id: str, shape_name: str, mesh_tag: str = "single") -> Dict:
+    path = os.path.join(DRYRUN_DIR, f"{arch_id}_{shape_name}_{mesh_tag}.json")
+    return json.load(open(path))
+
+
+def main():
+    print(f"{'arch':18s}{'shape':13s}{'dom':11s}{'t_comp':>10s}{'t_mem':>10s}"
+          f"{'t_coll':>10s}{'useful':>8s}")
+    for r in full_table():
+        print(f"{r['arch']:18s}{r['shape']:13s}{r['dominant']:11s}"
+              f"{r['t_compute_s']:10.4f}{r['t_memory_s']:10.4f}"
+              f"{r['t_collective_s']:10.4f}{r['useful_ratio']:8.2f}")
+
+
+if __name__ == "__main__":
+    main()

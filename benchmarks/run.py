@@ -1,0 +1,63 @@
+"""Benchmark harness entry point — one benchmark per paper table/figure.
+
+  fig1        paper Fig. 1: convergence comparison (THE reproduction)
+  ablation    weighting-policy x normalisation table (resolves eq.-5 reading)
+  kernels     Pallas kernel microbenches (name,us_per_call,derived CSV)
+  server      CA-AFL server-pass scalability vs FedBuff
+  roofline    §Roofline table from the dry-run artifacts (analytic terms)
+
+``python -m benchmarks.run`` runs everything in quick mode (CPU-friendly);
+``--full`` uses the paper-scale settings; ``--only <name>`` selects one.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+
+    jobs = []
+    if args.only in (None, "fig1"):
+        from benchmarks import bench_fig1_convergence
+        jobs.append(("fig1_convergence (paper Fig. 1)",
+                     lambda: bench_fig1_convergence.run(quick=quick)))
+    if args.only in (None, "ablation"):
+        from benchmarks import bench_weighting_ablation
+        jobs.append(("weighting_ablation",
+                     lambda: bench_weighting_ablation.run(quick=quick)))
+    if args.only in (None, "buffer_k"):
+        from benchmarks import bench_buffer_k
+        jobs.append(("buffer_k_sweep",
+                     lambda: bench_buffer_k.run(quick=quick)))
+    if args.only in (None, "kernels"):
+        from benchmarks import bench_kernels
+        jobs.append(("kernels", lambda: bench_kernels.run(quick=quick)))
+    if args.only in (None, "server"):
+        from benchmarks import bench_server_pass
+        jobs.append(("server_pass", lambda: bench_server_pass.run(quick=quick)))
+    if args.only in (None, "roofline"):
+        from benchmarks import roofline
+        jobs.append(("roofline", roofline.main))
+
+    failures = 0
+    for name, fn in jobs:
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"--- {name} done in {time.time() - t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"--- {name} FAILED: {type(e).__name__}: {e}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

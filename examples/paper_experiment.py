@@ -1,0 +1,22 @@
+"""End-to-end reproduction of the paper's §5 experiment (Fig. 1).
+
+30 clients x 1500 samples, non-IID, LeNet backbone, buffered-async server
+(K=10), all clients participating, heterogeneous device speeds. Runs the
+paper's method and all baselines over enough server rounds to separate the
+curves, and writes the comparison CSV.
+
+This is the full-scale driver (several minutes on CPU); pass --quick for a
+reduced run. See benchmarks/bench_fig1_convergence.py for the harness.
+
+Run:  PYTHONPATH=src:. python examples/paper_experiment.py [--quick]
+"""
+import argparse
+
+from benchmarks.bench_fig1_convergence import run
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--rounds", type=int, default=60)
+    args = ap.parse_args()
+    run(rounds=args.rounds, quick=args.quick)

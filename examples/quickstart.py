@@ -1,0 +1,35 @@
+"""Quickstart: contribution-aware async FL in ~40 lines.
+
+Simulates 8 heterogeneous clients training LeNet on a non-IID synthetic
+image dataset; compares the paper's weighting against uniform FedBuff.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+from repro.core import LatencyModel, run_async
+from repro.data import make_federated_image_dataset
+from repro.models.lenet import apply_lenet, init_lenet, lenet_loss
+
+# 1. federated non-IID data (Dirichlet label skew) + heterogeneous speeds
+clients, (x_test, y_test) = make_federated_image_dataset(
+    num_clients=8, samples_per_client=300, alpha=0.25, noise=1.0, seed=0)
+latency = LatencyModel.heterogeneous(8, max_slowdown=8.0, seed=0)
+
+# 2. model + evaluation
+params = init_lenet(jax.random.PRNGKey(0))
+eval_jit = jax.jit(lambda p: jnp.mean(
+    (jnp.argmax(apply_lenet(p, x_test[:512]), -1) == y_test[:512])
+    .astype(jnp.float32)))
+eval_fn = lambda p: {"acc": float(eval_jit(p))}
+
+# 3. run the buffered-async server with both weightings
+for weighting in ("paper", "fedbuff"):
+    fl = FLConfig(num_clients=8, buffer_size=4, local_steps=4, local_lr=0.05,
+                  batch_size=32, weighting=weighting)
+    res = run_async(lenet_loss, params, clients, fl, total_rounds=20,
+                    eval_fn=eval_fn, eval_every=5, latency=latency, seed=0)
+    curve = " ".join(f"r{h['round']}:{h['acc']:.2f}" for h in res.history)
+    print(f"{weighting:8s} | {curve} | sim_time={res.sim_time:.1f}")

@@ -1,0 +1,20 @@
+"""Serve the (FL-trained) global model: batched autoregressive decoding
+with a KV cache — the deployment path the decode_32k / long_500k dry-run
+shapes exercise at production scale.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py --arch qwen3-1.7b
+      (uses the reduced smoke variant so it runs on CPU; on a real slice
+       drop --smoke to serve the full config)
+"""
+import argparse
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    args, rest = ap.parse_known_args()
+    sys.argv = ["serve", "--arch", args.arch, "--smoke", "--batch", "4",
+                "--prompt-len", "16", "--gen", "16"] + rest
+    serve_main()

@@ -1,0 +1,94 @@
+"""Federated LM training with the COMPILED cohort step — the production
+path (core/cohort.py) on a host mesh, end to end.
+
+Each data-parallel slot is one FL client with its own non-IID synthetic
+token stream; the arrival schedule follows the heterogeneous latency model,
+so staleness really occurs; the server applies eq. 3/4/5 each round.
+
+Default is a CPU-sized decoder (~12M params). --model-dim/--layers scale it
+up (e.g. --model-dim 768 --layers 12 --vocab 32768 ~ 100M params for a real
+machine); --rounds controls duration.
+
+Run:  PYTHONPATH=src python examples/train_lm_federated.py --rounds 20
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig, ModelConfig
+from repro.core import init_cohort_state, make_cohort_step
+from repro.core.simulator import LatencyModel
+from repro.data.synthetic import make_lm_token_stream
+from repro.launch.train import arrival_schedule
+from repro.models.model import build_model
+from repro.utils import tree_count_params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--cohort", type=int, default=4)
+    ap.add_argument("--buffer-k", type=int, default=3)
+    ap.add_argument("--model-dim", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--weighting", default="paper")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="fl-lm", family="dense", num_layers=args.layers,
+        d_model=args.model_dim, num_heads=max(2, args.model_dim // 64),
+        num_kv_heads=max(2, args.model_dim // 128), d_ff=4 * args.model_dim,
+        vocab_size=args.vocab)
+    model = build_model(cfg)
+    fl = FLConfig(buffer_size=args.buffer_k, local_steps=2, local_lr=5e-3,
+                  weighting=args.weighting)
+
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"model params: {tree_count_params(params):,}")
+    state = init_cohort_state(params, args.cohort)
+    step = jax.jit(make_cohort_step(model.loss, fl), donate_argnums=0)
+
+    latency = LatencyModel.heterogeneous(args.cohort, max_slowdown=6.0, seed=0)
+    sched = arrival_schedule(args.cohort, args.buffer_k, latency, args.rounds)
+    sizes = jnp.asarray(np.random.default_rng(0).integers(
+        500, 2000, args.cohort), jnp.float32)
+
+    # per-client non-IID token streams (different bigram structure per slot)
+    def round_batch(r):
+        local, probe = [], []
+        for c in range(args.cohort):
+            t = make_lm_token_stream(args.vocab, args.seq,
+                                     fl.local_steps * args.batch + 2,
+                                     seed=1000 * c + r)
+            lt = t[:fl.local_steps * args.batch].reshape(
+                fl.local_steps, args.batch, -1)
+            local.append(lt)
+            probe.append(t[-2:])
+        local = np.stack(local)  # (C, M, b, S+1)
+        probe = np.stack(probe)  # (C, 2, S+1)
+        return {
+            "local": {"tokens": jnp.asarray(local[..., :-1]),
+                      "labels": jnp.asarray(local[..., 1:])},
+            "probe": {"tokens": jnp.asarray(probe[..., :-1]),
+                      "labels": jnp.asarray(probe[..., 1:])},
+            "arrival": jnp.asarray(sched[r]),
+            "data_sizes": sizes,
+        }
+
+    for r in range(args.rounds):
+        t0 = time.time()
+        state, mets = step(state, round_batch(r))
+        print(f"round {r + 1:3d}: probe_ce={float(mets['fresh_loss_mean']):.4f} "
+              f"S_min={float(mets['staleness_min']):.3f} "
+              f"arrivals={int(sched[r].sum())} ({time.time() - t0:.1f}s)")
+    print("final version:", int(state.version))
+
+
+if __name__ == "__main__":
+    main()

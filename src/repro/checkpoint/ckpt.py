@@ -1,0 +1,60 @@
+"""Pytree checkpointing to .npz (orbax is unavailable in this environment).
+
+Flattens a pytree with jax.tree_util key-paths so arbitrary nested
+dict/list/tuple/NamedTuple structures round-trip. The treedef is restored
+from a caller-provided template (``like=``) which keeps loading safe and
+simple; a structure-free load returns a flat {keypath: array} dict.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _key_str(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def save_checkpoint(path: str, tree: Any, step: Optional[int] = None) -> None:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    payload = {_key_str(p): np.asarray(v) for p, v in flat}
+    if step is not None:
+        payload["__step__"] = np.asarray(step)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    # atomic write: tmp file + rename
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **payload)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_checkpoint(path: str, like: Any = None):
+    """Load a checkpoint; if ``like`` is given, restore into its structure.
+
+    Returns (tree_or_flat_dict, step_or_None).
+    """
+    with np.load(path) as z:
+        data = {k: z[k] for k in z.files}
+    step = int(data.pop("__step__")) if "__step__" in data else None
+    if like is None:
+        return data, step
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, v in flat:
+        k = _key_str(p)
+        if k not in data:
+            raise KeyError(f"checkpoint missing key {k}")
+        arr = data[k]
+        if tuple(arr.shape) != tuple(np.shape(v)):
+            raise ValueError(f"shape mismatch for {k}: {arr.shape} vs {np.shape(v)}")
+        leaves.append(arr.astype(np.asarray(v).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

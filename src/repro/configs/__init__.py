@@ -1,0 +1,9 @@
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    ArchConfig,
+    FLConfig,
+    ModelConfig,
+    ShapeConfig,
+    smoke_variant,
+)
+from repro.configs.registry import ASSIGNED_ARCHS, get_arch, list_archs  # noqa: F401

@@ -1,0 +1,19 @@
+from repro.core.aggregation import aggregate, aggregate_fused  # noqa: F401
+from repro.core.buffer import BufferEntry, UpdateBuffer, VersionHistory  # noqa: F401
+from repro.core.client import make_fresh_loss_fn, make_local_update_fn  # noqa: F401
+from repro.core.cohort import (  # noqa: F401
+    CohortState,
+    DistFLState,
+    init_cohort_state,
+    init_dist_state,
+    make_cohort_step,
+    make_dist_step,
+)
+from repro.core.server import AsyncServer, SyncServer  # noqa: F401
+from repro.core.simulator import LatencyModel, SimResult, run_async, run_sync  # noqa: F401
+from repro.core.weighting import (  # noqa: F401
+    POLICIES,
+    contribution_weights,
+    staleness_degree,
+    statistical_effect,
+)

@@ -1,0 +1,44 @@
+"""Server-side weighted aggregation (eq. 5) over stacked client deltas.
+
+Two equivalent implementations:
+  * ``aggregate``       — pure jnp (XLA), works everywhere;
+  * ``aggregate_fused`` — routes the flat hot loop through the Pallas
+    ``weighted_agg`` kernel (one HBM pass computes the weighted sum; see
+    repro/kernels/weighted_agg). Tests assert both match.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_sub, tree_weighted_sum
+
+
+def aggregate(global_params, deltas_stacked, weights, eta_g: float, k: int):
+    """eq. (5): x_{t+1} = x_t - eta_g * (1/K) sum_i w_i Delta_i.
+
+    deltas_stacked: pytree with leading (K, ...) axis. weights: (K,).
+    """
+    scale = eta_g / float(k)
+    upd = tree_weighted_sum(deltas_stacked, weights.astype(jnp.float32) * scale)
+    return tree_sub(global_params, upd), upd
+
+
+def aggregate_fused(global_params, deltas_stacked, weights, eta_g: float, k: int,
+                    interpret: bool = True):
+    """Same maths via the Pallas kernel (flattened per-leaf)."""
+    from repro.kernels.weighted_agg.ops import weighted_sum as pallas_ws
+
+    scale = eta_g / float(k)
+    w = weights.astype(jnp.float32) * scale
+
+    def leaf_update(x, d):
+        dk = d.reshape(d.shape[0], -1)  # (K, n)
+        u = pallas_ws(dk.astype(jnp.float32), w, interpret=interpret)
+        return (x.astype(jnp.float32) - u.reshape(x.shape)).astype(x.dtype), \
+            u.reshape(x.shape).astype(x.dtype)
+
+    pairs = jax.tree.map(leaf_update, global_params, deltas_stacked)
+    new = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    upd = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    return new, upd

@@ -1,0 +1,55 @@
+"""Server-side K-buffer with model-version history (FedBuff structure)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class BufferEntry:
+    client_id: int
+    delta: Any  # pytree: cumulative local update Delta_i
+    base_version: int  # global version the client trained from
+    data_size: int  # N_i
+
+
+class UpdateBuffer:
+    """Accumulates client uploads; ready when K updates are buffered."""
+
+    def __init__(self, k: int):
+        self.k = int(k)
+        self._entries: List[BufferEntry] = []
+
+    def add(self, entry: BufferEntry) -> None:
+        self._entries.append(entry)
+
+    def ready(self) -> bool:
+        return len(self._entries) >= self.k
+
+    def drain(self) -> List[BufferEntry]:
+        """Pop the first K entries (FIFO), keep any overflow buffered."""
+        out, self._entries = self._entries[: self.k], self._entries[self.k:]
+        return out
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+class VersionHistory:
+    """Ring of recent global-model snapshots for exact eq.-3 distances."""
+
+    def __init__(self, max_versions: int):
+        self.max_versions = int(max_versions)
+        self._snaps: Dict[int, Any] = {}
+
+    def put(self, version: int, params: Any) -> None:
+        self._snaps[version] = params
+        floor = version - self.max_versions
+        for v in [v for v in self._snaps if v < floor]:
+            del self._snaps[v]
+
+    def get(self, version: int) -> Optional[Any]:
+        return self._snaps.get(version)
+
+    def __contains__(self, version: int) -> bool:
+        return version in self._snaps

@@ -1,0 +1,67 @@
+"""FL client: M local SGD steps from a (possibly stale) base model.
+
+``make_local_update_fn`` builds a jit-able function:
+
+    (base_params, batches, key) -> (delta, metrics)
+
+where ``delta = base - end`` is the *cumulative update* Delta_i of the paper
+(sum over local steps of lr * grad, for plain SGD), and ``batches`` is a
+pytree whose leaves carry a leading (M, ...) local-step axis.
+
+``make_fresh_loss_fn`` evaluates the CURRENT global model on a fresh local
+mini-batch — the P_i^t probe of eq. (4). In the real protocol the server
+broadcasts x^t to the buffered clients, which reply with one scalar; the
+simulator performs that exchange directly.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import apply_updates, sgd
+from repro.utils.pytree import tree_sub
+
+
+def make_local_update_fn(loss_fn: Callable, local_steps: int, local_lr: float,
+                         momentum: float = 0.0,
+                         prox_mu: float = 0.0) -> Callable:
+    """loss_fn(params, batch) -> (scalar, metrics_dict).
+
+    ``prox_mu > 0`` adds the FedProx proximal term mu/2 * ||w - w_base||^2
+    to each local step — the standard heterogeneity mitigation the paper's
+    related-work line cites; composes with any aggregation policy.
+    """
+    opt = sgd(local_lr, momentum=momentum)
+    grad_fn = jax.grad(lambda p, b: loss_fn(p, b)[0])
+
+    def local_update(base_params, batches, _key=None):
+        opt_state = opt.init(base_params)
+
+        def step(carry, batch):
+            params, ostate = carry
+            g = grad_fn(params, batch)
+            if prox_mu:
+                g = jax.tree.map(
+                    lambda gi, p, b: gi + prox_mu * (p - b).astype(gi.dtype),
+                    g, params, base_params)
+            upd, ostate = opt.update(g, ostate, params)
+            return (apply_updates(params, upd), ostate), None
+
+        (end_params, _), _ = jax.lax.scan(step, (base_params, opt_state),
+                                          batches, length=local_steps)
+        delta = tree_sub(base_params, end_params)  # Delta_i (gradient-like)
+        return delta, {}
+
+    return local_update
+
+
+def make_fresh_loss_fn(loss_fn: Callable) -> Callable:
+    """(global_params, fresh_batch) -> scalar mean per-sample loss."""
+
+    def fresh_loss(global_params, fresh_batch):
+        loss, _ = loss_fn(global_params, fresh_batch)
+        return loss.astype(jnp.float32)
+
+    return fresh_loss

@@ -1,0 +1,228 @@
+"""Compiled production FL round — the paper's protocol as one SPMD program.
+
+Two deployment mappings (DESIGN.md §2.1):
+
+* **replicated-client** (archs whose replica fits one model-axis group):
+  the ``data`` mesh axis carries C concurrent cohort slots (clients). State
+  holds, per slot, the client's *current* local params and the *base*
+  snapshot it last pulled — so eq. (3) staleness is computed EXACTLY
+  (per-slot ``||x^t - base_i||^2`` full-model reductions), the fresh-loss
+  probe (eq. 4) evaluates x^t on each client's probe batch, and the
+  weighted delta reduction (eq. 5) is one masked psum over ``data``.
+  Stragglers (arrival_mask=0) carry their local progress into the next
+  round instead of contributing — identical semantics to the event-driven
+  simulator, but fully compiled.
+
+* **distributed-client** (arctic-480b, qwen1.5-110b): one client spans the
+  whole mesh (FSDP x TP). The K-buffer fills across sequential step calls
+  with a *running weighted accumulator*: under mean-normalisation the
+  eq.-3 min cancels (w_i / sum w_j is min-free), so only scalar buffers +
+  one params-shaped accumulator are carried — the O(1)-memory streaming
+  form of eq. (5). Staleness distances use the scalar update-norm ring
+  (cross terms dropped; exact variant = simulator; agreement tested on
+  small models).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+from repro.core.client import make_local_update_fn
+from repro.core.weighting import contribution_weights, staleness_degree, statistical_effect
+from repro.utils.pytree import tree_sq_dist, tree_sub, tree_weighted_sum
+
+
+# ---------------------------------------------------------------------------
+# replicated-client cohort
+# ---------------------------------------------------------------------------
+
+
+class CohortState(NamedTuple):
+    global_params: Any  # x^t (replicated over data, TP over model)
+    client_params: Any  # (C, ...) current local state per slot
+    client_base: Any  # (C, ...) base snapshot each slot pulled (eq. 3)
+    client_version: jnp.ndarray  # (C,) int32 — version of that base
+    version: jnp.ndarray  # scalar int32, t
+
+
+def init_cohort_state(params: Any, cohort: int) -> CohortState:
+    def stack():
+        # distinct buffers per field: donation must never see aliased args
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cohort,) + x.shape) * 1,
+            params)
+
+    return CohortState(
+        global_params=params,
+        client_params=stack(),
+        client_base=stack(),
+        client_version=jnp.zeros((cohort,), jnp.int32),
+        version=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_cohort_step(loss_fn: Callable, fl: FLConfig) -> Callable:
+    """Build the compiled replicated-client FL round.
+
+    loss_fn(params, batch_dict) -> (scalar, metrics).
+    Batch layout (C = cohort slots on the data axis):
+      batch["local"] : leaves (C, M, b, ...) — M local steps per slot
+      batch["probe"] : leaves (C, bp, ...)   — fresh-loss probe (eq. 4)
+      batch["arrival"]: (C,) f32 {0,1}       — slots buffered this round
+      batch["data_sizes"]: (C,) f32          — N_i
+    """
+    local_update = make_local_update_fn(loss_fn, fl.local_steps, fl.local_lr,
+                                        fl.local_momentum)
+
+    def step(state: CohortState, batch: Dict[str, Any]):
+        arrival = batch["arrival"].astype(jnp.float32)
+
+        # --- local training: every in-flight slot advances M steps -------
+        deltas_cur, _ = jax.vmap(local_update)(state.client_params, batch["local"])
+        end_params = jax.vmap(tree_sub)(state.client_params, deltas_cur)
+        end_params = jax.tree.map(lambda e, c: e.astype(c.dtype), end_params,
+                                  state.client_params)
+        # cumulative upload delta measured from the pulled base (Delta_i)
+        up_delta = jax.vmap(tree_sub)(state.client_base, end_params)
+
+        # --- eq. 3: exact staleness degree -------------------------------
+        dist = jax.vmap(lambda b: tree_sq_dist(state.global_params, b))(
+            state.client_base)
+        s = staleness_degree(dist)
+
+        # --- eq. 4: fresh-loss probe of x^t ------------------------------
+        fresh = jax.vmap(lambda pb: loss_fn(state.global_params, pb)[0],
+                         in_axes=(0,))(batch["probe"])
+        p = statistical_effect(fresh, batch["data_sizes"])
+
+        # --- eq. 5: contribution-aware masked aggregation ----------------
+        tau = (state.version - state.client_version).astype(jnp.float32)
+        w = contribution_weights(fl.weighting, p, s, tau, s_min=fl.s_min,
+                                 poly_a=fl.poly_a, normalize=fl.normalize,
+                                 arrival_mask=arrival)
+        k_eff = jnp.maximum(jnp.sum(arrival), 1.0)
+        w_scaled = w * (fl.global_lr / k_eff)
+        update = tree_weighted_sum(up_delta, w_scaled)
+        new_global = jax.tree.map(lambda x, u: (x - u.astype(x.dtype)),
+                                  state.global_params, update)
+
+        # --- arrivals re-sync; stragglers keep their local progress ------
+        def resync(stacked_new_src, stacked_old):
+            def leaf(g, old):
+                m = arrival.reshape((-1,) + (1,) * (old.ndim - 1))
+                return jnp.where(m > 0, g[None].astype(old.dtype), old)
+            return jax.tree.map(leaf, stacked_new_src, stacked_old)
+
+        new_client_params = resync(new_global, end_params)
+        new_client_base = resync(new_global, state.client_base)
+        new_version = state.version + 1
+        new_client_version = jnp.where(arrival > 0, new_version,
+                                       state.client_version).astype(jnp.int32)
+
+        metrics = {
+            "fresh_loss_mean": jnp.mean(fresh),
+            "staleness_min": jnp.min(s),
+            "weights_max": jnp.max(w),
+            "update_sq_norm": tree_sq_dist(state.global_params, new_global),
+        }
+        return CohortState(new_global, new_client_params, new_client_base,
+                           new_client_version, new_version), metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# distributed-client (sequential buffer, streaming weighted accumulator)
+# ---------------------------------------------------------------------------
+
+
+class DistFLState(NamedTuple):
+    global_params: Any  # x^t, FSDP x TP sharded
+    accum: Any  # running sum v_i * Delta_i (params-shaped, f32)
+    vsum: jnp.ndarray  # running sum v_i (scalar f32)
+    count: jnp.ndarray  # updates buffered so far (int32)
+    version: jnp.ndarray  # t (int32)
+    update_norm_ring: jnp.ndarray  # (max_staleness,) ||u_s||^2 scalars
+
+
+def init_dist_state(params: Any, fl: FLConfig) -> DistFLState:
+    acc_dtype = jnp.dtype(fl.accum_dtype)
+    return DistFLState(
+        global_params=params,
+        accum=jax.tree.map(lambda x: jnp.zeros(x.shape, acc_dtype), params),
+        vsum=jnp.zeros((), jnp.float32),
+        count=jnp.zeros((), jnp.int32),
+        version=jnp.zeros((), jnp.int32),
+        update_norm_ring=jnp.zeros((fl.max_staleness,), jnp.float32),
+    )
+
+
+def make_dist_step(loss_fn: Callable, fl: FLConfig) -> Callable:
+    """One sequential buffer contribution + conditional server apply.
+
+    Batch layout (single distributed client):
+      batch["local"] : leaves (M, b, ...)
+      batch["probe"] : leaves (bp, ...)
+      batch["tau"]   : scalar int32 — simulated staleness in rounds
+      batch["data_size"]: scalar f32
+    """
+    local_update = make_local_update_fn(loss_fn, fl.local_steps, fl.local_lr,
+                                        fl.local_momentum)
+
+    def step(state: DistFLState, batch: Dict[str, Any]):
+        delta, _ = local_update(state.global_params, batch["local"])
+
+        # eq. 4 probe
+        fresh = loss_fn(state.global_params, batch["probe"])[0]
+        p = batch["data_size"].astype(jnp.float32) * fresh.astype(jnp.float32)
+
+        # eq. 3 distance via scalar update-norm ring (cross terms dropped)
+        tau = jnp.minimum(batch["tau"], fl.max_staleness - 1)
+        idx = jnp.arange(fl.max_staleness)
+        recent = idx < tau  # ring[0] = newest
+        d = jnp.sum(state.update_norm_ring * recent) + 1e-12
+
+        # streaming weight v_i (mean-normalised at apply; min_j cancels)
+        if fl.weighting == "paper":
+            v = p * d
+        elif fl.weighting == "multiplicative":
+            v = p / d
+        elif fl.weighting == "fedbuff":
+            v = jnp.ones((), jnp.float32)
+        else:  # polynomial / fedasync
+            v = (1.0 + tau.astype(jnp.float32)) ** (-fl.poly_a)
+
+        accum = jax.tree.map(
+            lambda a, dl: a + (v * dl.astype(jnp.float32)).astype(a.dtype),
+            state.accum, delta)
+        vsum = state.vsum + v
+        count = state.count + 1
+
+        def apply_fn(st):
+            accum_, vsum_, _ = st
+            upd = jax.tree.map(lambda a: (fl.global_lr / jnp.maximum(vsum_, 1e-12)) * a,
+                               accum_)
+            new_params = jax.tree.map(lambda x, u: (x - u.astype(x.dtype)),
+                                      state.global_params, upd)
+            unorm = jnp.sum(jnp.stack([jnp.sum(jnp.square(u)) for u in
+                                       jax.tree.leaves(upd)]))
+            ring = jnp.concatenate([unorm[None], state.update_norm_ring[:-1]])
+            zero_accum = jax.tree.map(jnp.zeros_like, accum_)
+            return (new_params, zero_accum, jnp.zeros((), jnp.float32),
+                    jnp.zeros((), jnp.int32), state.version + 1, ring)
+
+        def hold_fn(st):
+            accum_, vsum_, count_ = st
+            return (state.global_params, accum_, vsum_, count_, state.version,
+                    state.update_norm_ring)
+
+        new_params, accum, vsum, count, version, ring = jax.lax.cond(
+            count >= fl.buffer_size, apply_fn, hold_fn, (accum, vsum, count))
+
+        metrics = {"fresh_loss": fresh, "v_weight": v, "buffered": count}
+        return DistFLState(new_params, accum, vsum, count, version, ring), metrics
+
+    return step

@@ -1,0 +1,66 @@
+"""Secure-aggregation compatibility layer (additive pairwise masking).
+
+The paper motivates buffered (K-client) asynchronous FL specifically
+because it "is suitable to combine with the secured aggregation methods"
+(§3) — unlike fully-async servers that see every update in the clear.
+This module provides the Bonawitz-style additive-masking primitive over
+parameter pytrees and shows how the contribution-aware weights compose
+with it:
+
+* every pair (i, j) of the K buffered clients derives a shared PRG seed;
+  client i adds +PRG(seed_ij) for j > i and −PRG(seed_ij) for j < i to its
+  (weighted) update — the masks cancel exactly in the server's sum;
+* weights: S_i (eq. 3) is computed server-side from model versions (no
+  client data needed) and P_i (eq. 4) is a single scalar upload, so the
+  server can return w_i to each buffered client BEFORE upload; clients
+  submit `w_i * Delta_i + mask_i` and the server only ever sees the
+  weighted SUM — the individual update stays private. This two-phase
+  exchange is the protocol variant recorded in DESIGN.md §10.
+
+Dropout recovery (mask reconstruction for clients that fail mid-round) is
+out of scope; the buffer simply re-queues their upload next round.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_add
+
+
+def _pair_seed(round_key, i: int, j: int):
+    lo, hi = (i, j) if i < j else (j, i)
+    return jax.random.fold_in(jax.random.fold_in(round_key, lo), hi)
+
+
+def _mask_like(key, params: Any, scale: float):
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    masked = [
+        (jax.random.normal(k, l.shape, jnp.float32) * scale).astype(l.dtype)
+        for k, l in zip(keys, leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, masked)
+
+
+def mask_update(round_key, update: Any, client_id: int,
+                cohort_ids: Sequence[int], scale: float = 1.0) -> Any:
+    """Add the pairwise-cancelling mask for ``client_id`` to ``update``."""
+    masked = update
+    for other in cohort_ids:
+        if other == client_id:
+            continue
+        m = _mask_like(_pair_seed(round_key, client_id, other), update, scale)
+        sign = 1.0 if client_id < other else -1.0
+        masked = jax.tree.map(lambda u, mm: u + sign * mm, masked, m)
+    return masked
+
+
+def secure_sum(masked_updates: List[Any]) -> Any:
+    """Server-side sum of masked updates == sum of raw updates."""
+    out = masked_updates[0]
+    for u in masked_updates[1:]:
+        out = tree_add(out, u)
+    return out

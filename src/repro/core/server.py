@@ -1,0 +1,126 @@
+"""FL servers (python orchestration layer; all maths is jit-compiled).
+
+``AsyncServer`` implements the paper's contribution-aware buffered
+aggregation with *exact* eq.-3 staleness (snapshot-based distances), plus
+the baseline policies via ``FLConfig.weighting``. ``SyncServer`` is FedAvg.
+
+The O(1)-memory sharded-ring variant used by the compiled production step
+lives in repro/core/cohort.py; tests check the two agree.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core.aggregation import aggregate
+from repro.core.buffer import BufferEntry, UpdateBuffer, VersionHistory
+from repro.core.weighting import contribution_weights, staleness_degree, statistical_effect
+from repro.utils.pytree import tree_sq_dist, tree_stack
+
+
+class AsyncServer:
+    """Buffered asynchronous server (FedBuff structure + CA weighting)."""
+
+    def __init__(self, init_params: Any, fl: FLConfig,
+                 fresh_loss_fn: Callable[[Any, Any], jnp.ndarray]):
+        self.fl = fl
+        self.params = init_params
+        self.version = 0
+        self.buffer = UpdateBuffer(fl.buffer_size)
+        self.history = VersionHistory(fl.max_staleness)
+        self.history.put(0, init_params)
+        self._fresh_loss = jax.jit(fresh_loss_fn)
+        self._sq_dist = jax.jit(tree_sq_dist)
+        self._aggregate = jax.jit(
+            lambda p, d, w: aggregate(p, d, w, fl.global_lr, fl.buffer_size))
+        self.round_log: List[Dict] = []
+
+    # ------------------------------------------------------------------
+    def receive(self, client_id: int, delta: Any, base_version: int,
+                data_size: int,
+                fresh_batch_fn: Optional[Callable[[], Any]] = None,
+                fresh_batches: Optional[Dict[int, Any]] = None) -> bool:
+        """Buffer one upload; aggregate if K reached. Returns True if a new
+        global version was produced. ``fresh_batch_fn`` is stored per entry
+        and called at aggregation time (the P_i probe uses x^t, not the
+        model version at upload time)."""
+        e = BufferEntry(client_id=client_id, delta=delta,
+                        base_version=base_version, data_size=data_size)
+        e.fresh_batch_fn = fresh_batch_fn  # attach probe callback
+        self.buffer.add(e)
+        if self.buffer.ready():
+            self._do_aggregate()
+            return True
+        return False
+
+    # ------------------------------------------------------------------
+    def _do_aggregate(self) -> None:
+        fl = self.fl
+        entries = self.buffer.drain()
+        k = len(entries)
+
+        # eq. 3 — exact distances from snapshots
+        dists = []
+        taus = []
+        for e in entries:
+            base = self.history.get(e.base_version)
+            if base is None:  # older than the ring: treat as max-stale
+                oldest = min(v for v in range(self.version + 1)
+                             if v in self.history)
+                base = self.history.get(oldest)
+            dists.append(float(self._sq_dist(self.params, base)))
+            taus.append(self.version - e.base_version)
+        sq_dists = jnp.asarray(dists, jnp.float32)
+        s = staleness_degree(sq_dists)
+
+        # eq. 4 — fresh-loss probe of x^t on each buffered client's data
+        losses = []
+        for e in entries:
+            if getattr(e, "fresh_batch_fn", None) is not None:
+                losses.append(float(self._fresh_loss(self.params, e.fresh_batch_fn())))
+            else:
+                losses.append(1.0)
+        p = statistical_effect(jnp.asarray(losses, jnp.float32),
+                               jnp.asarray([e.data_size for e in entries], jnp.float32))
+
+        w = contribution_weights(fl.weighting, p, s,
+                                 jnp.asarray(taus, jnp.float32),
+                                 s_min=fl.s_min, poly_a=fl.poly_a,
+                                 normalize=fl.normalize)
+        stacked = tree_stack([e.delta for e in entries])
+        self.params, _ = self._aggregate(self.params, stacked, w)
+        self.version += 1
+        self.history.put(self.version, self.params)
+        self.round_log.append({
+            "version": self.version,
+            "weights": np.asarray(w).tolist(),
+            "staleness_deg": np.asarray(s).tolist(),
+            "stat_effect": np.asarray(p).tolist(),
+            "tau": taus,
+            "clients": [e.client_id for e in entries],
+            "k": k,
+        })
+
+
+class SyncServer:
+    """FedAvg: waits for all selected clients, size-weighted average."""
+
+    def __init__(self, init_params: Any, fl: FLConfig):
+        self.fl = fl
+        self.params = init_params
+        self.version = 0
+        self._aggregate = jax.jit(
+            lambda p, d, w, k: aggregate(p, d, w, fl.global_lr, k),
+            static_argnames=("k",))
+
+    def round(self, deltas: List[Any], data_sizes: List[int]) -> None:
+        k = len(deltas)
+        w = jnp.asarray(data_sizes, jnp.float32)
+        w = w * k / jnp.sum(w)  # size-weighted, mean-1 normalised
+        stacked = tree_stack(deltas)
+        self.params, _ = self._aggregate(self.params, stacked, w, k)
+        self.version += 1

@@ -1,0 +1,80 @@
+"""Contribution-aware update weighting — the paper's central equations.
+
+eq. (3)  S_i^t = min_j ||x^t - x^{t-tau_j}||^2 / ||x^t - x^{t-tau_i}||^2
+eq. (4)  P_i^t = N_i * (1/|zeta_i|) F_i(x^t, zeta_i)
+eq. (5)  x_{t+1} = x_t - eta_g * (1/K) * sum_i (P_i^t / S_i^t) * Delta_i
+
+Policies (see DESIGN.md §1.1 for the faithfulness discussion):
+  paper          : w_i = P_i / max(S_i, s_min)          (eq. 5, literal)
+  multiplicative : w_i = P_i * S_i                      (typo-corrected read)
+  fedbuff        : w_i = 1                              (uniform — baseline [26])
+  polynomial     : w_i = (1 + tau_i)^-a                 (staleness discount the
+                                                         paper quotes, a=0.5)
+  fedasync       : alias of polynomial (per-update mixing weight)
+
+``normalize="mean"`` rescales weights to mean 1 so eq. 5's (1/K)*sum keeps
+the global-update magnitude decoupled from raw loss scale; ``"none"`` is the
+strictly literal form. All functions are jit-safe.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+POLICIES = ("paper", "multiplicative", "fedbuff", "polynomial", "fedasync")
+
+
+def staleness_degree(sq_dists: jnp.ndarray, eps: float = 1e-12) -> jnp.ndarray:
+    """eq. (3). sq_dists: (K,) ||x^t - x^{base_i}||^2 >= 0. Returns (K,) in (0,1].
+
+    A client whose base model equals the freshest base gets exactly 1.
+    Degenerate all-zero distances (round 0: nobody is stale) => all ones.
+    """
+    d = jnp.maximum(sq_dists.astype(jnp.float32), 0.0)
+    m = jnp.min(d)
+    s = (m + eps) / (d + eps)
+    return jnp.clip(s, 0.0, 1.0)
+
+
+def statistical_effect(batch_losses: jnp.ndarray, data_sizes: jnp.ndarray) -> jnp.ndarray:
+    """eq. (4). batch_losses: (K,) mean per-sample loss of x^t on a fresh
+    local mini-batch; data_sizes: (K,) N_i. Returns (K,)."""
+    return data_sizes.astype(jnp.float32) * batch_losses.astype(jnp.float32)
+
+
+def contribution_weights(policy: str,
+                         p_stat: jnp.ndarray,
+                         s_stale: jnp.ndarray,
+                         tau_rounds: jnp.ndarray,
+                         *,
+                         s_min: float = 1e-3,
+                         poly_a: float = 0.5,
+                         normalize: str = "mean",
+                         arrival_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Per-update aggregation weights w_i (before the 1/K of eq. 5).
+
+    arrival_mask: optional (K,) {0,1} — cohort slots actually present in the
+    buffer this round; masked-out slots get weight 0 and are excluded from
+    the normalisation.
+    """
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r}; valid: {POLICIES}")
+    if policy == "paper":
+        w = p_stat / jnp.maximum(s_stale, s_min)
+    elif policy == "multiplicative":
+        w = p_stat * s_stale
+    elif policy == "fedbuff":
+        w = jnp.ones_like(p_stat)
+    else:  # polynomial / fedasync
+        w = (1.0 + tau_rounds.astype(jnp.float32)) ** (-poly_a)
+    w = w.astype(jnp.float32)
+    if arrival_mask is not None:
+        mask = arrival_mask.astype(jnp.float32)
+        w = w * mask
+        denom_n = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom_n = jnp.asarray(w.shape[0], jnp.float32)
+    if normalize == "mean":
+        w = w * denom_n / jnp.maximum(jnp.sum(w), 1e-12)
+    elif normalize != "none":
+        raise ValueError(f"unknown normalize {normalize!r}")
+    return w

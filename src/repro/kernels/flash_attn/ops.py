@@ -1,0 +1,44 @@
+"""Jit'd wrapper: (B, S, H, D) layout, kernel-vs-oracle switch, padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn import kernel as _k
+from repro.kernels.flash_attn import ref as _ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "use_kernel",
+                                             "interpret", "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    use_kernel: bool = True, interpret: bool = True,
+                    block_q: int = 128, block_k: int = 128):
+    """q, k, v: (B, S, H, D) (H already GQA-expanded). Returns (B, S, H, D)."""
+    b, s, h, d = q.shape
+
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, x.shape[1], d)
+
+    qf, kf, vf = to_bh(q), to_bh(k), to_bh(v)
+    if not use_kernel:
+        out = _ref.attention_ref(qf, kf, vf, causal=causal, window=window)
+    else:
+        bq = min(block_q, s)
+        bk = min(block_k, kf.shape[1])
+        pad_q = (-s) % bq
+        pad_k = (-kf.shape[1]) % bk
+        if pad_k:
+            assert causal, "kv padding requires a causal mask to stay exact"
+        if pad_q or pad_k:
+            # pad kv with fully-masked positions (kpos >= original length is
+            # never attended because q rows are causal and padded q dropped)
+            qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+            kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0)))
+            vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0)))
+        out = _k.flash_attention_pallas(qf, kf, vf, causal=causal,
+                                        window=window, block_q=bq, block_k=bk,
+                                        interpret=interpret)
+        out = out[:, :s]
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

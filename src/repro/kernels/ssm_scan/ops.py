@@ -1,0 +1,40 @@
+"""Jit'd wrapper for the selective-scan kernel (kernel vs oracle switch)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan import kernel as _k
+from repro.kernels.ssm_scan import ref as _ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret",
+                                             "chunk", "block_d"))
+def selective_scan(x, dt, b, c, a, use_kernel: bool = True,
+                   interpret: bool = True, chunk: int = 128,
+                   block_d: int = 512):
+    """x, dt: (B, S, di); b, c: (B, S, N); a: (di, N) -> y (B, S, di) f32."""
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+    if not use_kernel:
+        return _ref.selective_scan_ref(x, dt, b, c, a)
+    bsz, s, di = x.shape
+    chunk = min(chunk, s)
+    block_d = min(block_d, di)
+    pad_s = (-s) % chunk
+    pad_d = (-di) % block_d
+    if pad_s or pad_d:
+        pad3 = ((0, 0), (0, pad_s), (0, pad_d))
+        x = jnp.pad(x, pad3)
+        dt = jnp.pad(dt, pad3)
+        b = jnp.pad(b, ((0, 0), (0, pad_s), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad_s), (0, 0)))
+        a = jnp.pad(a, ((0, pad_d), (0, 0)))
+    y = _k.selective_scan_pallas(x, dt, b, c, a, chunk=chunk, block_d=block_d,
+                                 interpret=interpret)
+    return y[:, :s, :di]

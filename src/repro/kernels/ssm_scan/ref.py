@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the selective scan (sequential, materialised)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, dt, b, c, a):
+    """Same contract as the kernel: returns y_t = C_t . h_t."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    bsz, s, di = x.shape
+    n = a.shape[1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        da = jnp.exp(dtt[..., None] * a[None])  # (B, di, N)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    xs = (xf.transpose(1, 0, 2), dtf.transpose(1, 0, 2),
+          bf.transpose(1, 0, 2), cf.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2)

@@ -1,0 +1,1 @@
+from repro.kernels.weighted_agg.ops import sq_dists, weighted_sum  # noqa: F401

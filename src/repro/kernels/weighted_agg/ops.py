@@ -1,0 +1,54 @@
+"""Jit'd public wrappers: pad to lane-aligned tiles, pick kernel vs oracle."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.weighted_agg import kernel as _k
+from repro.kernels.weighted_agg import ref as _ref
+
+
+def _pad_to(n: int, block: int) -> int:
+    return (n + block - 1) // block * block
+
+
+def _pick_block(n: int) -> int:
+    """Largest lane-aligned tile <= DEFAULT that keeps padding waste small."""
+    if n >= _k.DEFAULT_BLOCK_N:
+        return _k.DEFAULT_BLOCK_N
+    return max(_k.LANE, _pad_to(n, _k.LANE) // max(1, _pad_to(n, _k.LANE) // 2048))
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def weighted_sum(deltas, weights, use_kernel: bool = True, interpret: bool = True):
+    """deltas: (K, N), weights: (K,) -> (N,) = sum_k w_k * deltas_k."""
+    deltas = deltas.astype(jnp.float32)
+    weights = weights.astype(jnp.float32)
+    if not use_kernel:
+        return _ref.weighted_sum_ref(deltas, weights)
+    k, n = deltas.shape
+    block = _pick_block(n)
+    npad = _pad_to(n, block)
+    if npad != n:
+        deltas = jnp.pad(deltas, ((0, 0), (0, npad - n)))
+    out = _k.weighted_sum_pallas(deltas, weights, block_n=block,
+                                 interpret=interpret)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def sq_dists(x, bases, use_kernel: bool = True, interpret: bool = True):
+    """x: (N,), bases: (K, N) -> (K,) squared distances ||x - base_k||^2."""
+    x = x.astype(jnp.float32)
+    bases = bases.astype(jnp.float32)
+    if not use_kernel:
+        return _ref.sq_dists_ref(x, bases)
+    k, n = bases.shape
+    block = _pick_block(n)
+    npad = _pad_to(n, block)
+    if npad != n:
+        x = jnp.pad(x, (0, npad - n))
+        bases = jnp.pad(bases, ((0, 0), (0, npad - n)))
+    return _k.sq_dists_pallas(x, bases, block_n=block, interpret=interpret)

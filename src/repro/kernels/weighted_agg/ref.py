@@ -1,0 +1,16 @@
+"""Pure-jnp oracles for the weighted_agg kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def weighted_sum_ref(deltas: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """deltas: (K, N), weights: (K,) -> (N,)."""
+    return jnp.einsum("kn,k->n", deltas.astype(jnp.float32),
+                      weights.astype(jnp.float32))
+
+
+def sq_dists_ref(x: jnp.ndarray, bases: jnp.ndarray) -> jnp.ndarray:
+    """x: (N,), bases: (K, N) -> (K,)."""
+    diff = bases.astype(jnp.float32) - x.astype(jnp.float32)[None]
+    return jnp.sum(diff * diff, axis=1)

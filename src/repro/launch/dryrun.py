@@ -1,0 +1,163 @@
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production mesh, with 512 placeholder host devices standing in for the TPU
+pod(s). Proves the sharding config is coherent end-to-end and extracts the
+roofline inputs (FLOPs, bytes, collective traffic, per-device memory).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs.base import INPUT_SHAPES  # noqa: E402
+from repro.configs.registry import get_arch, list_archs  # noqa: E402
+from repro.launch.hlo import collective_bytes  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.program import build_program  # noqa: E402
+
+
+def _parse_overrides(items):
+    out = {}
+    for it in items or []:
+        k, v = it.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("true", "True"):
+            v = True
+        if v in ("false", "False"):
+            v = False
+        out[k] = v
+    return out
+
+
+def run_one(arch_id: str, shape_name: str, multi_pod: bool,
+            verbose: bool = True, model_overrides: dict = None,
+            fl=None) -> dict:
+    rec = {"arch": arch_id, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "ok": False,
+           "model_overrides": model_overrides or {}}
+    arch = get_arch(arch_id)
+    if shape_name in arch.skip_shapes:
+        rec.update(skipped=True, reason=f"skip per DESIGN.md: {arch.notes[:80]}")
+        rec["ok"] = True
+        if verbose:
+            print(f"[dryrun] SKIP {arch_id} x {shape_name} (by design)")
+        return rec
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        t0 = time.time()
+        prog = build_program(arch_id, shape_name, mesh, fl=fl,
+                             model_overrides=model_overrides)
+        with mesh:
+            jitted = jax.jit(
+                prog.step_fn,
+                in_shardings=prog.in_shardings,
+                out_shardings=prog.out_shardings,
+                donate_argnums=prog.donate_argnums,
+            )
+            lowered = jitted.lower(*prog.arg_sds)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        try:
+            hlo = compiled.as_text()
+        except Exception:
+            hlo = lowered.as_text()
+        coll = collective_bytes(hlo)
+        if os.environ.get("DRYRUN_SAVE_HLO"):
+            os.makedirs(os.environ["DRYRUN_SAVE_HLO"], exist_ok=True)
+            with open(os.path.join(os.environ["DRYRUN_SAVE_HLO"],
+                                   f"{arch_id}_{shape_name}.hlo.txt"), "w") as f:
+                f.write(hlo)
+        mem_rec = {}
+        if mem is not None:
+            for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                mem_rec[f] = int(getattr(mem, f, 0) or 0)
+        rec.update(
+            ok=True,
+            lower_s=round(t1 - t0, 2),
+            compile_s=round(t2 - t1, 2),
+            flops=float(cost.get("flops", 0.0)) if cost else 0.0,
+            bytes_accessed=float(cost.get("bytes accessed", 0.0)) if cost else 0.0,
+            collective_bytes=coll,
+            memory=mem_rec,
+            meta=prog.meta,
+        )
+        if verbose:
+            print(f"[dryrun] OK {arch_id} x {shape_name} mesh={rec['mesh']} "
+                  f"lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                  f"flops={rec['flops']:.3e} coll={coll.get('total', 0):.3e}B")
+            if mem_rec:
+                print(f"         memory_analysis: {mem_rec}")
+    except Exception as e:  # noqa: BLE001 — a failure here is a finding
+        rec.update(error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[dryrun] FAIL {arch_id} x {shape_name}: {rec['error']}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--out", default=None, help="directory for per-pair JSON")
+    ap.add_argument("--tag", default=None, help="suffix for output JSON names")
+    ap.add_argument("--model-override", action="append", default=[],
+                    help="k=v ModelConfig overrides (perf experiments)")
+    ap.add_argument("--fl-override", action="append", default=[],
+                    help="k=v FLConfig overrides (perf experiments)")
+    args = ap.parse_args()
+    overrides = _parse_overrides(args.model_override)
+    fl = None
+    fl_over = _parse_overrides(args.fl_override)
+    if fl_over:
+        import dataclasses as _dc
+
+        from repro.launch.program import DRYRUN_FL
+        fl = _dc.replace(DRYRUN_FL, **fl_over)
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for multi in meshes:
+        for a in archs:
+            for s in shapes:
+                rec = run_one(a, s, multi, model_overrides=overrides, fl=fl)
+                n_fail += 0 if rec["ok"] else 1
+                if args.out:
+                    os.makedirs(args.out, exist_ok=True)
+                    suffix = f"_{args.tag}" if args.tag else ""
+                    tag = f"{a}_{s}_{'multi' if multi else 'single'}{suffix}.json"
+                    with open(os.path.join(args.out, tag), "w") as f:
+                        json.dump(rec, f, indent=1)
+    print(f"[dryrun] done; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Parse collective traffic out of lowered/compiled HLO text.
+
+``cost_analysis()`` reports FLOPs and HBM bytes but not collective bytes —
+we sum the result-shape bytes of every collective op in the (stable-HLO or
+post-optimization HLO) text. This is the canonical "payload bytes entering
+the interconnect per participating device group" measure used by the
+roofline's collective term; per-device link bytes are derived downstream
+(bytes * (g-1)/g / devices for ring algorithms).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# matches e.g.:  %ag = bf16[2,512,4096]{2,1,0} all-gather(%x), ...
+_HLO_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+
+# stablehlo/mhlo style:  stablehlo.all_reduce ... : tensor<512x4096xbf16>
+_MLIR_RE = re.compile(
+    r"\"?(?:stablehlo|mhlo)\.(all_gather|all_reduce|reduce_scatter|"
+    r"all_to_all|collective_permute)\"?.*?tensor<([0-9x]*)x?([a-z0-9]+)>",
+    re.DOTALL)
+
+
+def _shape_bytes(dims: str, dtype: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.replace("x", ",").split(","):
+            if d:
+                n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes per collective-op kind. Returns {op: bytes} + total."""
+    out: Dict[str, int] = defaultdict(int)
+    for m in _HLO_RE.finditer(hlo_text):
+        dtype, dims, op = m.groups()
+        out[op] += _shape_bytes(dims, dtype)
+    if not out:  # fall back to MLIR-style text
+        for m in _MLIR_RE.finditer(hlo_text):
+            op, dims, dtype = m.groups()
+            out[op.replace("_", "-")] += _shape_bytes(dims, dtype)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def count_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

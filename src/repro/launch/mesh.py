@@ -1,0 +1,29 @@
+"""Production mesh builders.
+
+Target hardware: TPU v5e pods — 256 chips/pod, (data=16, model=16) within a
+pod; the multi-pod mesh adds a leading DCN-mapped "pod" axis (2 pods = 512
+chips). Defined as FUNCTIONS so importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU smoke)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))
+
+
+def batch_axes_for(mesh) -> tuple:
+    """The data-parallel axes of a mesh (cohort/batch sharding)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,2 @@
+from repro.models.lenet import apply_lenet, init_lenet, lenet_loss  # noqa: F401
+from repro.models.model import Model, build_model  # noqa: F401

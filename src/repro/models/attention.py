@@ -1,0 +1,270 @@
+"""Attention: GQA/MQA, qk-norm, optional bias, RoPE, causal / bidirectional /
+sliding-window, chunked (flash-style, O(S) memory) training path, and
+single-token decode against full or ring KV caches.
+
+The chunked path is pure JAX (lax.scan + online softmax) so it lowers on any
+backend — it is the XLA fallback of the Pallas flash kernel in
+``repro.kernels.flash_attn`` (used on real TPUs; validated against the same
+reference in tests).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, cross: bool = False):
+    dtype = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, d, cfg.num_heads * hd, dtype),
+        "wk": dense_init(kk, d, cfg.num_kv_heads * hd, dtype),
+        "wv": dense_init(kv, d, cfg.num_kv_heads * hd, dtype),
+        "wo": dense_init(ko, cfg.num_heads * hd, d, dtype, scale=(cfg.num_heads * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _project_q(cfg, p, x):
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(x.shape[:-1] + (cfg.num_heads, hd))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+    return q
+
+
+def _project_kv(cfg, p, x):
+    hd = cfg.resolved_head_dim
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    k = k.reshape(x.shape[:-1] + (cfg.num_kv_heads, hd))
+    v = v.reshape(x.shape[:-1] + (cfg.num_kv_heads, hd))
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"])
+    return k, v
+
+
+def _repeat_kv(x, n_rep: int):
+    if n_rep == 1:
+        return x
+    b, s, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(b, s, h * n_rep, d)
+
+
+# ---------------------------------------------------------------------------
+# core attention maths
+# ---------------------------------------------------------------------------
+
+
+def _full_attention(q, k, v, causal: bool, q_offset: int = 0,
+                    window: int = 0):
+    """Materialised-scores attention. q:(B,Sq,H,D) k,v:(B,Sk,H,D)."""
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    if causal:
+        qpos = jnp.arange(q.shape[1]) + q_offset
+        kpos = jnp.arange(k.shape[1])
+        mask = qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+def _chunked_causal_attention(q, k, v, q_chunk: int):
+    """Flash-style online-softmax over q chunks; kv masked per chunk.
+
+    O(S * q_chunk) live memory. Scans q chunks; each chunk attends to the
+    full (masked) key range — the upper-triangle overcount is accepted and
+    accounted for in the roofline notes.
+    """
+    b, s, h, d = q.shape
+    nq = s // q_chunk
+    qs = q.reshape(b, nq, q_chunk, h, d).transpose(1, 0, 2, 3, 4)  # (nq,B,c,H,D)
+    kpos = jnp.arange(k.shape[1])
+
+    def body(carry, inp):
+        qc, i = inp
+        qpos = i * q_chunk + jnp.arange(q_chunk)
+        scale = d ** -0.5
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qc.astype(jnp.float32) * scale,
+                            k.astype(jnp.float32))
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+        return carry, out
+
+    _, outs = jax.lax.scan(jax.checkpoint(body), 0, (qs, jnp.arange(nq)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+
+
+def _sliding_window_attention(q, k, v, window: int, q_chunk: int):
+    """Causal SWA with exact banded compute: each q chunk slices the
+    (window + chunk)-length kv band it can see — no full-S scores."""
+    b, s, h, d = q.shape
+    band = window + q_chunk
+    # left-pad kv by `window` so band slicing is always in range
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    nq = s // q_chunk
+    qs = q.reshape(b, nq, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, inp):
+        qc, i = inp
+        start = i * q_chunk  # band start in padded coords
+        kb = jax.lax.dynamic_slice_in_dim(kp, start, band, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, start, band, axis=1)
+        scale = d ** -0.5
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qc.astype(jnp.float32) * scale,
+                            kb.astype(jnp.float32))
+        qpos = start + window + jnp.arange(q_chunk)  # padded absolute pos
+        kpos = start + jnp.arange(band)
+        mask = (qpos[:, None] >= kpos[None, :]) & \
+               (kpos[None, :] > qpos[:, None] - window) & \
+               (kpos[None, :] >= window)  # drop the padding region
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(vb.dtype), vb)
+        return carry, out
+
+    _, outs = jax.lax.scan(jax.checkpoint(body), 0, (qs, jnp.arange(nq)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+
+
+FULL_ATTN_MAX_SEQ = 4096  # above this, the chunked path is used
+Q_CHUNK = 512
+
+
+def attention_train(cfg, p, x, kv_x=None, causal: bool = True,
+                    positions: Optional[jnp.ndarray] = None,
+                    window: Optional[int] = None,
+                    use_pallas: bool = False):
+    """Self (or cross, via kv_x) attention over a full sequence."""
+    b, s, _ = x.shape
+    q = _project_q(cfg, p, x)
+    k, v = _project_kv(cfg, p, kv_x if kv_x is not None else x)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if cfg.rope_theta and kv_x is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    window = window if window is not None else cfg.attn_window
+    if use_pallas and causal:
+        from repro.kernels.flash_attn.ops import flash_attention
+
+        out = flash_attention(q, k, v, causal=True, window=window or 0,
+                              use_kernel=True, interpret=True)
+    elif window and causal:
+        qc = min(Q_CHUNK, s)
+        out = _sliding_window_attention(q, k, v, window, qc) if s > qc \
+            else _full_attention(q, k, v, causal=True, window=window)
+    elif causal and (s > FULL_ATTN_MAX_SEQ or
+                     (getattr(cfg, "force_chunked_attn", False) and s > Q_CHUNK)):
+        out = _chunked_causal_attention(q, k, v, Q_CHUNK)
+    else:
+        out = _full_attention(q, k, v, causal=causal)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg, batch: int, cache_len: int, dtype):
+    """Full cache, or ring cache of size ``attn_window`` when SWA."""
+    hd = cfg.resolved_head_dim
+    length = min(cache_len, cfg.attn_window) if cfg.attn_window else cache_len
+    shape = (batch, length, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_decode(cfg, p, x, cache, pos):
+    """x: (B, 1, d); pos: scalar int32 current position. Returns (y, cache).
+
+    Cache semantics: full cache writes at index ``pos``; ring (SWA) cache
+    writes at ``pos % window`` and masks by recency.
+    """
+    b = x.shape[0]
+    q = _project_q(cfg, p, x)  # (B,1,H,Dh)
+    k_new, v_new = _project_kv(cfg, p, x)  # (B,1,Hkv,Dh)
+    if cfg.rope_theta:
+        pp = jnp.full((b, 1), pos)
+        q = apply_rope(q, pp, cfg.rope_theta)
+        k_new = apply_rope(k_new, pp, cfg.rope_theta)
+    length = cache["k"].shape[1]
+    write_idx = (pos % length) if cfg.attn_window else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), write_idx, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), write_idx, axis=1)
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    kk = _repeat_kv(k, n_rep)
+    vv = _repeat_kv(v, n_rep)
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                        kk.astype(jnp.float32))  # (B,H,1,L)
+    slot = jnp.arange(length)
+    if cfg.attn_window:
+        valid = slot <= pos if length > 0 else slot < 0  # ring: all slots <= pos written
+        # slots hold positions pos-window+1..pos (mod window) once warm
+        valid = jnp.minimum(pos + 1, length) > ((write_idx - slot) % length)
+    else:
+        valid = slot <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(vv.dtype), vv)
+    y = out.reshape(b, 1, -1) @ p["wo"]
+    return y, {"k": k, "v": v}
+
+
+def cross_attention_decode(cfg, p, x, enc_kv):
+    """Decoder cross-attention against precomputed encoder K/V."""
+    b = x.shape[0]
+    q = _project_q(cfg, p, x)
+    k, v = enc_kv["k"], enc_kv["v"]
+    n_rep = cfg.num_heads // cfg.num_kv_heads
+    kk = _repeat_kv(k, n_rep)
+    vv = _repeat_kv(v, n_rep)
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                        kk.astype(jnp.float32))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(vv.dtype), vv)
+    return out.reshape(b, x.shape[1], -1) @ p["wo"]
+
+
+def precompute_cross_kv(cfg, p, enc_out):
+    k, v = _project_kv(cfg, p, enc_out)
+    return {"k": k, "v": v}

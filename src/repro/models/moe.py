@@ -1,0 +1,127 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+TPU adaptation: instead of per-token dynamic routing (GPU-style gather
+kernels), tokens are dispatched into a static (E, C, d) buffer via an
+argsort over expert assignments — a dense, collective-friendly layout.
+Experts are sharded over the ``model`` mesh axis (expert parallelism); XLA
+inserts the all-to-all when activations move from token-sharded to
+expert-sharded layout. Over-capacity tokens are dropped (standard
+capacity-factor semantics); the router aux loss balances load.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    d, dff, e = cfg.d_model, cfg.resolved_moe_d_ff, cfg.num_experts
+    keys = jax.random.split(key, 8)
+
+    def stack_init(k, shape_in, shape_out, n):
+        ks = jax.random.split(k, n)
+        return jnp.stack([dense_init(ki, shape_in, shape_out, dtype) for ki in ks])
+
+    p = {
+        "router": dense_init(keys[0], d, e, jnp.float32, scale=0.02),
+        "w_gate": stack_init(keys[1], d, dff, e),  # (E, d, dff)
+        "w_up": stack_init(keys[2], d, dff, e),
+        "w_down": stack_init(keys[3], dff, d, e),
+    }
+    if cfg.num_shared_experts:
+        sd = dff * cfg.num_shared_experts
+        p["shared"] = {
+            "w_gate": dense_init(keys[4], d, sd, dtype),
+            "w_up": dense_init(keys[5], d, sd, dtype),
+            "w_down": dense_init(keys[6], sd, d, dtype, scale=sd ** -0.5),
+        }
+    return p
+
+
+def _expert_ffn(p, x):
+    """x: (E, C, d) -> (E, C, d) with per-expert SwiGLU weights."""
+    gate = jnp.einsum("ecd,edf->ecf", x, p["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", x, p["w_up"])
+    h = jax.nn.silu(gate) * up
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def _dispatch_group(cfg, p, xf, cap):
+    """Sort-based dispatch + expert FFN + combine for ONE token group.
+
+    xf: (Tg, d). All gathers/scatters here index only group-local tensors,
+    so under vmap-over-groups (group dim sharded on ``data``) SPMD keeps
+    every intermediate sharded — no involuntary replication.
+    """
+    e, k = cfg.num_experts, cfg.experts_per_token
+    tg, d = xf.shape
+    logits = (xf.astype(jnp.float32)) @ p["router"]  # (Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)  # (Tg, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], e), axis=0)
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_coef
+
+    flat_e = expert_ids.reshape(-1)  # (Tg*k,)
+    sort_idx = jnp.argsort(flat_e)
+    sorted_e = flat_e[sort_idx]
+    token_idx = sort_idx // k
+    counts = jax.ops.segment_sum(jnp.ones_like(sorted_e), sorted_e,
+                                 num_segments=e)
+    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                               jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(tg * k) - offsets[sorted_e]
+    keep = pos_in_e < cap
+    slot = sorted_e * cap + jnp.where(keep, pos_in_e, 0)
+
+    gathered = xf[token_idx] * keep[:, None].astype(xf.dtype)
+    buf = jnp.zeros((e * cap, d), xf.dtype).at[slot].add(
+        jnp.where(keep[:, None], gathered, 0))
+    buf = buf.reshape(e, cap, d)
+
+    out_buf = _expert_ffn(p, buf).reshape(e * cap, d)
+
+    y_tok = out_buf[slot] * keep[:, None].astype(out_buf.dtype)
+    w = gate_vals.reshape(-1)[sort_idx].astype(y_tok.dtype)
+    y = jnp.zeros((tg, d), y_tok.dtype).at[token_idx].add(y_tok * w[:, None])
+    return y, aux
+
+
+def moe_ffn(cfg, p, x, capacity_factor: float = None):
+    """x: (B, S, d). Returns (y, aux_loss).
+
+    Dispatch runs independently in ``cfg.moe_groups`` token groups (grouped
+    a2a layout: group dim rides the data axis, experts ride the model axis),
+    falling back to one global group when tokens don't split evenly.
+    """
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    # decode (s == 1): guarantee dropless dispatch — serving must not lose
+    # tokens to capacity; the buffer is tiny at one token per sequence.
+    if s == 1:
+        capacity_factor = max(capacity_factor, float(e) / max(k, 1))
+    g = cfg.moe_groups if (cfg.moe_groups > 1 and t % cfg.moe_groups == 0) else 1
+    tg = t // g
+    cap = int(max(1, (k * tg / e) * capacity_factor))
+    xg = x.reshape(g, tg, d)
+    y, aux = jax.vmap(lambda xf: _dispatch_group(cfg, p, xf, cap))(xg)
+    y = y.reshape(t, d)
+    aux = jnp.mean(aux)
+
+    # --- shared experts (always active) ----------------------------------
+    if cfg.num_shared_experts:
+        xf = x.reshape(t, d)
+        sp = p["shared"]
+        h = jax.nn.silu(xf @ sp["w_gate"]) * (xf @ sp["w_up"])
+        y = y + h @ sp["w_down"]
+
+    return y.reshape(b, s, d), aux

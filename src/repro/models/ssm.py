@@ -1,0 +1,139 @@
+"""Mamba-1 selective SSM block (pure JAX).
+
+Training path uses a *chunked* scan: an outer ``lax.scan`` over sequence
+chunks carrying the (B, d_inner, N) state, with an associative scan inside
+each (rematerialised) chunk — O(S/chunk) saved carries instead of
+O(S * d_inner * N) activations. This mirrors the VMEM-resident chunking the
+Pallas kernel (repro.kernels.ssm_scan) performs on TPU.
+
+Decode path is the O(1) recurrent update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+SSM_CHUNK = 256
+
+
+def init_ssm(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    d, di, n = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    dtr = cfg.resolved_dt_rank
+    ks = jax.random.split(key, 6)
+    # S4D-real initialisation for A
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di), jnp.float32) *
+                   (cfg.ssm_conv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * n, dtype),
+        "dt_proj": dense_init(ks[3], dtr, di, jnp.float32, scale=dtr ** -0.5),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "A_log": jnp.log(a_init),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dtype, scale=di ** -0.5),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, S, di), w: (K, di)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out + b
+
+
+def _ssm_inputs(cfg, p, x):
+    """Shared pre-scan projections. x: (B, S, di) post-conv post-silu.
+
+    Returns dt (B,S,di) f32, B_ (B,S,N) f32, C_ (B,S,N) f32.
+    """
+    n = cfg.ssm_state
+    dtr = cfg.resolved_dt_rank
+    dbc = (x @ p["x_proj"]).astype(jnp.float32)
+    dt, b_, c_ = jnp.split(dbc, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])  # (B,S,di)
+    return dt, b_, c_
+
+
+def ssm_train(cfg, p, u):
+    """u: (B, S, d_model) -> (B, S, d_model)."""
+    b, s, _ = u.shape
+    di, n = cfg.ssm_d_inner, cfg.ssm_state
+    xz = u @ p["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)  # (B,S,di) each
+    x = jax.nn.silu(_causal_conv(x, p["conv_w"], p["conv_b"]))
+    dt, b_, c_ = _ssm_inputs(cfg, p, x)
+    a = -jnp.exp(p["A_log"])  # (di, N)
+
+    chunk = min(SSM_CHUNK, s)
+    nc = s // chunk
+    assert s % chunk == 0, f"seq {s} not divisible by ssm chunk {chunk}"
+
+    def reshape_c(t):  # (B,S,...) -> (nc, B, chunk, ...)
+        return t.reshape(b, nc, chunk, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    xs = (reshape_c(x.astype(jnp.float32)), reshape_c(dt), reshape_c(b_), reshape_c(c_))
+
+    def chunk_fn(h0, inp):
+        xc, dtc, bc, cc = inp  # (B,chunk,di) / (B,chunk,di) / (B,chunk,N) x2
+        # discretise: a_bar (B,c,di,N), b_bar*x (B,c,di,N)
+        da = jnp.exp(dtc[..., None] * a[None, None])  # (B,c,di,N)
+        dbx = (dtc * xc)[..., None] * bc[:, :, None, :]  # (B,c,di,N)
+
+        def comb(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        a_cum, b_cum = jax.lax.associative_scan(comb, (da, dbx), axis=1)
+        h = a_cum * h0[:, None] + b_cum  # (B,c,di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", h, cc)
+        return h[:, -1], y
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    _, ys = jax.lax.scan(jax.checkpoint(chunk_fn), h0, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+    y = y + x.astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype)
+    return y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_cache(cfg, batch: int, dtype):
+    di, n, k = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "conv": jnp.zeros((batch, k - 1, di), dtype),
+        "h": jnp.zeros((batch, di, n), jnp.float32),
+    }
+
+
+def ssm_decode(cfg, p, u, cache):
+    """u: (B, 1, d_model). Returns (y, cache)."""
+    b = u.shape[0]
+    xz = u @ p["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)  # (B,1,di)
+    # conv over [cached K-1 inputs, current]
+    conv_in = jnp.concatenate([cache["conv"], x.astype(cache["conv"].dtype)], axis=1)
+    w = p["conv_w"]
+    xconv = jnp.einsum("bkd,kd->bd", conv_in, w) + p["conv_b"]
+    x1 = jax.nn.silu(xconv)[:, None, :]  # (B,1,di)
+    dt, b_, c_ = _ssm_inputs(cfg, p, x1)
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt[:, 0, :, None] * a[None])  # (B,di,N)
+    dbx = (dt[:, 0] * x1[:, 0].astype(jnp.float32))[..., None] * b_[:, 0, None, :]
+    h = da * cache["h"] + dbx
+    y = jnp.einsum("bdn,bn->bd", h, c_[:, 0])
+    y = y + x1[:, 0].astype(jnp.float32) * p["D"]
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(u.dtype)
+    out = (y @ p["out_proj"])[:, None, :]
+    new_cache = {"conv": conv_in[:, 1:], "h": h}
+    return out, new_cache

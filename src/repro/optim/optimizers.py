@@ -1,0 +1,111 @@
+"""Minimal pure-JAX optimizers (no optax in this environment).
+
+Interface mirrors optax's GradientTransformation:
+
+    opt = sgd(lr=0.1, momentum=0.9)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+``update`` returns the *delta to add to params* (i.e. already negated and
+scaled by the learning rate), which keeps client/server code simple.
+Schedules: ``lr`` may be a float or a callable step -> lr; state carries the
+step counter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+LrType = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Any]  # (grads, state, params) -> (updates, state)
+
+
+def _resolve_lr(lr: LrType, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+class SgdState(NamedTuple):
+    step: jnp.ndarray
+    momentum: Any  # pytree like params, or None-pytree of zeros
+
+
+def sgd(lr: LrType, momentum: float = 0.0, weight_decay: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    use_mom = momentum != 0.0
+
+    def init(params):
+        mom = jax.tree.map(jnp.zeros_like, params) if use_mom else None
+        return SgdState(step=jnp.zeros((), jnp.int32), momentum=mom)
+
+    def update(grads, state, params=None):
+        step_lr = _resolve_lr(lr, state.step)
+        if weight_decay and params is not None:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+        if use_mom:
+            new_mom = jax.tree.map(lambda m, g: momentum * m + g, state.momentum, grads)
+            if nesterov:
+                eff = jax.tree.map(lambda m, g: momentum * m + g, new_mom, grads)
+            else:
+                eff = new_mom
+        else:
+            new_mom, eff = None, grads
+        updates = jax.tree.map(lambda g: -step_lr * g, eff)
+        return updates, SgdState(step=state.step + 1, momentum=new_mom)
+
+    return Optimizer(init=init, update=update)
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw(lr: LrType, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        step_lr = _resolve_lr(lr, state.step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def _upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay and p is not None:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-step_lr * u).astype(p.dtype if p is not None else m.dtype)
+
+        if params is None:
+            params = jax.tree.map(lambda m: m, mu)
+        updates = jax.tree.map(_upd, mu, nu, params)
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)

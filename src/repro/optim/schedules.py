@@ -1,0 +1,32 @@
+"""Learning-rate schedules (step -> lr callables)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    def f(step):
+        return jnp.asarray(lr, jnp.float32)
+
+    return f
+
+
+def cosine_schedule(peak_lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return peak_lr * (final_frac + (1 - final_frac) * cos)
+
+    return f
+
+
+def warmup_cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                           final_frac: float = 0.05):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return peak_lr * jnp.where(s < warmup_steps, warm, cos)
+
+    return f

@@ -1,0 +1,7 @@
+from repro.sharding.specs import (  # noqa: F401
+    batch_pspecs,
+    cache_pspecs,
+    cohort_state_pspecs,
+    dist_state_pspecs,
+    param_pspecs,
+)

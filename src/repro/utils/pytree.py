@@ -1,0 +1,115 @@
+"""Pytree arithmetic helpers used across the framework.
+
+All functions are pure and jit-safe; they operate leaf-wise on arbitrary
+pytrees of arrays (model parameters, optimizer states, client deltas).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    """Scale every leaf of ``a`` by scalar ``s`` (python or 0-d array)."""
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y, leaf-wise."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a, b):
+    """Sum of elementwise products across all leaves (float32 accum)."""
+    leaves_a = jax.tree.leaves(a)
+    leaves_b = jax.tree.leaves(b)
+    parts = [
+        jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32))
+        for x, y in zip(leaves_a, leaves_b)
+    ]
+    return jnp.sum(jnp.stack(parts))
+
+
+def tree_sq_norm(a):
+    """Squared L2 norm across all leaves (float32 accum)."""
+    parts = [
+        jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(a)
+    ]
+    return jnp.sum(jnp.stack(parts))
+
+
+def tree_sq_dist(a, b):
+    """Squared L2 distance ||a - b||^2 across all leaves."""
+    parts = [
+        jnp.sum(jnp.square(x.astype(jnp.float32) - y.astype(jnp.float32)))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    ]
+    return jnp.sum(jnp.stack(parts))
+
+
+def tree_weighted_sum(trees_stacked, weights):
+    """Weighted sum over the leading (client) axis of a stacked pytree.
+
+    ``trees_stacked`` has leaves of shape (K, ...); ``weights`` is (K,).
+    Returns a pytree with the leading axis contracted:  sum_k w_k * leaf[k].
+    """
+
+    def _ws(leaf):
+        w = weights.astype(jnp.float32).reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(leaf.astype(jnp.float32) * w, axis=0).astype(leaf.dtype)
+
+    return jax.tree.map(_ws, trees_stacked)
+
+
+def tree_stack(trees):
+    """Stack a python list of pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree, n):
+    """Inverse of tree_stack for a known leading size ``n``."""
+    return [jax.tree.map(lambda x, i=i: x[i], tree) for i in range(n)]
+
+
+def tree_count_params(a):
+    return sum(int(x.size) for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a):
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, a
+    )
+
+
+def tree_isfinite(a):
+    """True iff every element of every floating leaf is finite."""
+    parts = [
+        jnp.all(jnp.isfinite(x))
+        for x in jax.tree.leaves(a)
+        if jnp.issubdtype(x.dtype, jnp.floating)
+    ]
+    if not parts:
+        return jnp.asarray(True)
+    return jnp.all(jnp.stack(parts))
+
+
+def tree_flatten_to_vector(a):
+    """Concatenate all leaves into one flat f32 vector (for analysis/tests)."""
+    leaves = jax.tree.leaves(a)
+    return jnp.concatenate([x.astype(jnp.float32).reshape(-1) for x in leaves])

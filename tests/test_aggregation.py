@@ -1,0 +1,99 @@
+"""Aggregation (eq. 5) properties + Pallas-fused equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.aggregation import aggregate, aggregate_fused
+from repro.utils.pytree import (
+    tree_flatten_to_vector,
+    tree_stack,
+    tree_sub,
+    tree_weighted_sum,
+)
+
+
+def _params(key, scale=1.0):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w": jax.random.normal(k1, (8, 16)) * scale,
+        "b": jax.random.normal(k2, (16,)) * scale,
+        "nested": {"v": jax.random.normal(k3, (4, 4, 2)) * scale},
+    }
+
+
+class TestAggregate:
+    def test_fedbuff_equivalence(self):
+        """Uniform weights reproduce FedBuff's plain average (eq. 2)."""
+        key = jax.random.PRNGKey(0)
+        x = _params(key)
+        deltas = [_params(jax.random.PRNGKey(i + 1)) for i in range(4)]
+        stacked = tree_stack(deltas)
+        new, _ = aggregate(x, stacked, jnp.ones(4), eta_g=1.0, k=4)
+        mean = jax.tree.map(lambda *ds: sum(ds) / 4.0, *deltas)
+        expect = tree_sub(x, mean)
+        np.testing.assert_allclose(tree_flatten_to_vector(new),
+                                   tree_flatten_to_vector(expect), rtol=1e-5)
+
+    def test_permutation_invariance(self):
+        key = jax.random.PRNGKey(0)
+        x = _params(key)
+        deltas = [_params(jax.random.PRNGKey(i + 1)) for i in range(5)]
+        w = jnp.array([0.5, 1.5, 1.0, 0.7, 1.3])
+        perm = [3, 1, 4, 0, 2]
+        a1, _ = aggregate(x, tree_stack(deltas), w, 1.0, 5)
+        a2, _ = aggregate(x, tree_stack([deltas[i] for i in perm]),
+                          w[jnp.array(perm)], 1.0, 5)
+        np.testing.assert_allclose(tree_flatten_to_vector(a1),
+                                   tree_flatten_to_vector(a2), rtol=1e-5)
+
+    def test_zero_weights_no_update(self):
+        key = jax.random.PRNGKey(0)
+        x = _params(key)
+        stacked = tree_stack([_params(jax.random.PRNGKey(7))] * 3)
+        new, _ = aggregate(x, stacked, jnp.zeros(3), eta_g=1.0, k=3)
+        np.testing.assert_allclose(tree_flatten_to_vector(new),
+                                   tree_flatten_to_vector(x), rtol=1e-6)
+
+    @given(st.floats(min_value=0.1, max_value=2.0),
+           st.integers(min_value=1, max_value=6))
+    @settings(max_examples=20, deadline=None)
+    def test_eta_scaling(self, eta, k):
+        """Update scales linearly in eta_g (pytree = flat-vector equiv)."""
+        key = jax.random.PRNGKey(0)
+        x = _params(key)
+        deltas = [_params(jax.random.PRNGKey(i + 1)) for i in range(k)]
+        w = jnp.ones(k)
+        _, upd1 = aggregate(x, tree_stack(deltas), w, 1.0, k)
+        _, upd2 = aggregate(x, tree_stack(deltas), w, float(eta), k)
+        np.testing.assert_allclose(tree_flatten_to_vector(upd2),
+                                   tree_flatten_to_vector(upd1) * eta,
+                                   rtol=1e-4)
+
+    def test_pytree_equals_flat_vector(self):
+        """Aggregating leaf-wise == aggregating the flattened vector."""
+        key = jax.random.PRNGKey(3)
+        x = _params(key)
+        deltas = [_params(jax.random.PRNGKey(i + 10)) for i in range(3)]
+        w = jnp.array([0.2, 1.1, 1.7])
+        _, upd = aggregate(x, tree_stack(deltas), w, 1.0, 3)
+        flat_deltas = jnp.stack([tree_flatten_to_vector(d) for d in deltas])
+        flat_upd = (w / 3.0) @ flat_deltas
+        np.testing.assert_allclose(tree_flatten_to_vector(upd), flat_upd,
+                                   rtol=1e-5)
+
+
+class TestFusedAggregate:
+    def test_matches_xla_path(self):
+        key = jax.random.PRNGKey(0)
+        x = _params(key)
+        deltas = [_params(jax.random.PRNGKey(i + 1)) for i in range(4)]
+        w = jnp.array([0.5, 2.0, 1.0, 0.5])
+        stacked = tree_stack(deltas)
+        a1, u1 = aggregate(x, stacked, w, 0.7, 4)
+        a2, u2 = aggregate_fused(x, stacked, w, 0.7, 4, interpret=True)
+        np.testing.assert_allclose(tree_flatten_to_vector(a1),
+                                   tree_flatten_to_vector(a2), rtol=1e-4,
+                                   atol=1e-6)

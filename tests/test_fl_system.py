@@ -1,0 +1,248 @@
+"""Integration tests of the FL system: server/buffer semantics, simulator
+behaviour, compiled-cohort vs event-driven agreement, convergence ordering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import (
+    AsyncServer,
+    LatencyModel,
+    UpdateBuffer,
+    init_cohort_state,
+    make_cohort_step,
+    make_dist_step,
+    init_dist_state,
+    run_async,
+    run_sync,
+)
+from repro.core.buffer import BufferEntry
+from repro.data import make_federated_image_dataset
+from repro.models.lenet import apply_lenet, init_lenet, lenet_loss
+from repro.utils import tree_flatten_to_vector
+
+
+def _quad_loss(params, batch):
+    """Convex toy problem: params w; loss = mean (x.w - y)^2."""
+    x, y = batch
+    pred = x @ params["w"]
+    loss = jnp.mean((pred - y) ** 2)
+    return loss, {}
+
+
+def _quad_batch(key, n=16, d=4):
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (n, d))
+    w_true = jnp.arange(1.0, d + 1.0)
+    y = x @ w_true + 0.01 * jax.random.normal(k2, (n,))
+    return x, y
+
+
+class TestBuffer:
+    def test_fifo_and_overflow(self):
+        buf = UpdateBuffer(2)
+        for i in range(3):
+            buf.add(BufferEntry(i, {"w": jnp.zeros(1)}, 0, 10))
+        assert buf.ready()
+        first = buf.drain()
+        assert [e.client_id for e in first] == [0, 1]
+        assert len(buf) == 1  # overflow entry retained
+
+
+class TestAsyncServer:
+    def _server(self, weighting="paper", k=2):
+        fl = FLConfig(buffer_size=k, weighting=weighting, global_lr=1.0)
+        params = {"w": jnp.zeros(4)}
+        return AsyncServer(params, fl, lambda p, b: _quad_loss(p, b)[0]), fl
+
+    def test_aggregates_exactly_at_k(self):
+        server, _ = self._server()
+        d = {"w": jnp.ones(4)}
+        batch = _quad_batch(jax.random.PRNGKey(0))
+        assert not server.receive(0, d, 0, 10, lambda: batch)
+        assert server.receive(1, d, 0, 10, lambda: batch)
+        assert server.version == 1
+
+    def test_fedbuff_matches_plain_average(self):
+        server, _ = self._server("fedbuff")
+        batch = _quad_batch(jax.random.PRNGKey(0))
+        server.receive(0, {"w": jnp.ones(4)}, 0, 10, lambda: batch)
+        server.receive(1, {"w": 3 * jnp.ones(4)}, 0, 10, lambda: batch)
+        np.testing.assert_allclose(np.asarray(server.params["w"]),
+                                   -2.0 * np.ones(4), rtol=1e-5)
+
+    def test_version_history_pruned(self):
+        fl = FLConfig(buffer_size=1, max_staleness=3)
+        server = AsyncServer({"w": jnp.zeros(2)}, fl,
+                             lambda p, b: _quad_loss(p, b)[0])
+        batch = _quad_batch(jax.random.PRNGKey(0), d=2)
+        for i in range(6):
+            server.receive(0, {"w": jnp.ones(2) * 0.1}, server.version, 10,
+                           lambda: batch)
+        assert 0 not in server.history
+        assert server.version in server.history
+
+    def test_round_log_records_paper_quantities(self):
+        server, _ = self._server("paper")
+        batch = _quad_batch(jax.random.PRNGKey(0))
+        server.receive(0, {"w": jnp.ones(4)}, 0, 10, lambda: batch)
+        server.receive(1, {"w": jnp.ones(4)}, 0, 20, lambda: batch)
+        log = server.round_log[0]
+        assert set(log) >= {"weights", "staleness_deg", "stat_effect", "tau"}
+        # same staleness, P proportional to N_i => client 1 weighted higher
+        assert log["weights"][1] > log["weights"][0]
+
+
+class TestSimulator:
+    @pytest.fixture(scope="class")
+    def fed_setup(self):
+        clients, (xt, yt) = make_federated_image_dataset(
+            num_clients=6, samples_per_client=120, alpha=0.2, noise=0.8,
+            seed=3)
+        params = init_lenet(jax.random.PRNGKey(0))
+        ev = jax.jit(lambda p: jnp.mean(
+            (jnp.argmax(apply_lenet(p, xt[:256]), -1) == yt[:256])
+            .astype(jnp.float32)))
+        return clients, params, (lambda p: {"acc": float(ev(p))})
+
+    def test_async_beats_sync_wall_clock(self, fed_setup):
+        """The core async-FL claim: same #rounds, far less simulated time."""
+        clients, params, ev = fed_setup
+        fl = FLConfig(num_clients=6, buffer_size=3, local_steps=2,
+                      local_lr=0.05, batch_size=16)
+        lat = LatencyModel.heterogeneous(6, max_slowdown=10.0, seed=0)
+        res_a = run_async(lenet_loss, params, clients, fl, total_rounds=6,
+                          eval_fn=ev, latency=lat, seed=0)
+        res_s = run_sync(lenet_loss, params, clients, fl, total_rounds=6,
+                         eval_fn=ev, latency=lat, seed=0)
+        assert res_a.server_rounds == res_s.server_rounds == 6
+        assert res_a.sim_time < res_s.sim_time  # stragglers don't block
+
+    def test_straggler_updates_are_stale(self, fed_setup):
+        clients, params, ev = fed_setup
+        fl = FLConfig(num_clients=6, buffer_size=3, local_steps=2,
+                      local_lr=0.05, batch_size=16)
+        res = run_async(lenet_loss, params, clients, fl, total_rounds=8,
+                        eval_fn=ev, seed=0)
+        taus = [t for log in res.round_log for t in log["tau"]]
+        assert max(taus) >= 1  # staleness actually occurs
+        s_degrees = [s for log in res.round_log for s in log["staleness_deg"]]
+        assert min(s_degrees) < 1.0  # eq. 3 differentiates updates
+
+    def test_paper_weighting_trains(self, fed_setup):
+        clients, params, ev = fed_setup
+        fl = FLConfig(num_clients=6, buffer_size=3, local_steps=2,
+                      local_lr=0.05, batch_size=16, weighting="paper")
+        res = run_async(lenet_loss, params, clients, fl, total_rounds=15,
+                        eval_fn=ev, eval_every=15, seed=0)
+        assert res.history[-1]["acc"] > res.history[0]["acc"] + 0.2
+
+
+class TestCohortStep:
+    def test_matches_manual_equations(self):
+        """One compiled cohort round == hand-computed eq. 3/4/5."""
+        fl = FLConfig(buffer_size=2, local_steps=1, local_lr=0.1,
+                      weighting="paper", normalize="mean", global_lr=1.0)
+        params = {"w": jnp.array([1.0, -1.0, 0.5, 2.0])}
+        cohort = 2
+        state = init_cohort_state(params, cohort)
+        key = jax.random.PRNGKey(0)
+        batches = [_quad_batch(jax.random.fold_in(key, i)) for i in range(4)]
+        batch = {
+            "local": jax.tree.map(
+                lambda *xs: jnp.stack(xs).reshape(cohort, 1, *xs[0].shape),
+                *batches[:2]),
+            "probe": jax.tree.map(lambda *xs: jnp.stack(xs), *batches[2:]),
+            "arrival": jnp.ones(cohort),
+            "data_sizes": jnp.array([10.0, 30.0]),
+        }
+        step = make_cohort_step(_quad_loss, fl)
+        new_state, mets = step(state, batch)
+
+        # manual: both clients fresh (dist 0) => S = 1; P = N_i * probe loss
+        g0 = jax.grad(lambda p: _quad_loss(p, batches[0])[0])(params)["w"]
+        g1 = jax.grad(lambda p: _quad_loss(p, batches[1])[0])(params)["w"]
+        d0, d1 = 0.1 * g0, 0.1 * g1  # Delta = base - end = lr * grad
+        p0 = 10.0 * _quad_loss(params, batches[2])[0]
+        p1 = 30.0 * _quad_loss(params, batches[3])[0]
+        w = jnp.array([p0, p1])
+        w = w * 2 / jnp.sum(w)
+        expect = params["w"] - (jnp.stack([d0, d1]) * w[:, None]).sum(0) / 2
+        np.testing.assert_allclose(np.asarray(new_state.global_params["w"]),
+                                   np.asarray(expect), rtol=1e-5)
+        assert int(new_state.version) == 1
+
+    def test_straggler_keeps_progress_and_goes_stale(self):
+        fl = FLConfig(buffer_size=1, local_steps=1, local_lr=0.1,
+                      weighting="paper")
+        params = {"w": jnp.zeros(4)}
+        state = init_cohort_state(params, 2)
+        step = jax.jit(make_cohort_step(_quad_loss, fl))
+        key = jax.random.PRNGKey(0)
+        batch = {
+            "local": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (2, 1) + x.shape),
+                _quad_batch(key)),
+            "probe": jax.tree.map(lambda x: jnp.broadcast_to(x, (2,) + x.shape),
+                                  _quad_batch(jax.random.fold_in(key, 9))),
+            "arrival": jnp.array([1.0, 0.0]),  # slot 1 is a straggler
+            "data_sizes": jnp.ones(2),
+        }
+        s1, _ = step(state, batch)
+        assert int(s1.client_version[0]) == 1
+        assert int(s1.client_version[1]) == 0  # still on its old base
+        # straggler's local params differ from both base and new global
+        w_stale = np.asarray(jax.tree.leaves(s1.client_params)[0][1])
+        w_base = np.asarray(jax.tree.leaves(s1.client_base)[0][1])
+        assert not np.allclose(w_stale, w_base)
+        s2, mets = step(s1, batch)
+        assert float(mets["staleness_min"]) < 1.0  # slot 1 now measurably stale
+
+    def test_fedbuff_policy_reduces_to_uniform(self):
+        fl_p = FLConfig(buffer_size=2, local_steps=1, local_lr=0.1,
+                        weighting="fedbuff")
+        params = {"w": jnp.array([0.3, -0.7])}
+        state = init_cohort_state(params, 2)
+        key = jax.random.PRNGKey(1)
+        batch = {
+            "local": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (2, 1) + x.shape),
+                _quad_batch(key, d=2)),
+            "probe": jax.tree.map(lambda x: jnp.broadcast_to(x, (2,) + x.shape),
+                                  _quad_batch(jax.random.fold_in(key, 2), d=2)),
+            "arrival": jnp.ones(2),
+            "data_sizes": jnp.array([10.0, 99.0]),  # must be ignored
+        }
+        step = make_cohort_step(_quad_loss, fl_p)
+        s1, _ = step(state, batch)
+        g = jax.grad(lambda p: _quad_loss(p, jax.tree.map(lambda x: x[0, 0],
+                                                          batch["local"]))[0])(params)
+        expect = params["w"] - 0.1 * g["w"]  # both deltas identical
+        np.testing.assert_allclose(np.asarray(s1.global_params["w"]),
+                                   np.asarray(expect), rtol=1e-5)
+
+
+class TestDistStep:
+    def test_streaming_equals_batch_aggregation(self):
+        """K sequential dist-steps == one cohort aggregation (paper policy,
+        mean normalisation: the eq.-3 min cancels)."""
+        fl = FLConfig(buffer_size=2, local_steps=1, local_lr=0.1,
+                      weighting="fedbuff", global_lr=1.0)
+        params = {"w": jnp.array([1.0, 2.0, 3.0])}
+        step = jax.jit(make_dist_step(_quad_loss, fl))
+        state = init_dist_state(params, fl)
+        key = jax.random.PRNGKey(0)
+        deltas = []
+        for i in range(2):
+            b = _quad_batch(jax.random.fold_in(key, i), d=3)
+            batch = {"local": jax.tree.map(lambda x: x[None], b),
+                     "probe": _quad_batch(jax.random.fold_in(key, 10 + i), d=3),
+                     "tau": jnp.int32(0), "data_size": jnp.float32(10.0)}
+            g = jax.grad(lambda p: _quad_loss(p, b)[0])(params)
+            deltas.append(0.1 * g["w"])
+            state, _ = step(state, batch)
+        assert int(state.version) == 1
+        expect = params["w"] - (deltas[0] + deltas[1]) / 2
+        np.testing.assert_allclose(np.asarray(state.global_params["w"]),
+                                   np.asarray(expect), rtol=1e-5)

@@ -1,0 +1,124 @@
+"""Equivalence tests for the §Perf optimisations: every beyond-paper knob
+must be bit-compatible (up to float tolerance) with the baseline path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, smoke_variant
+from repro.models import build_model
+from repro.models.moe import init_moe, moe_ffn
+from repro.utils import tree_flatten_to_vector
+
+
+@pytest.fixture(scope="module")
+def qwen_smoke():
+    cfg = smoke_variant(get_arch("qwen3-1.7b").model).replace(num_layers=4)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 20), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 20), 0,
+                                     cfg.vocab_size),
+    }
+    return cfg, params, batch
+
+
+class TestChunkedCE:
+    @pytest.mark.parametrize("chunk", [7, 8, 40, 1000])
+    def test_loss_and_grads_match(self, qwen_smoke, chunk):
+        cfg, params, batch = qwen_smoke
+        m0 = build_model(cfg)
+        m1 = build_model(cfg.replace(ce_chunk=chunk))
+        l0, _ = m0.loss(params, batch)
+        l1, _ = m1.loss(params, batch)
+        np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+        g0 = jax.grad(lambda p: m0.loss(p, batch)[0])(params)
+        g1 = jax.grad(lambda p: m1.loss(p, batch)[0])(params)
+        np.testing.assert_allclose(tree_flatten_to_vector(g0),
+                                   tree_flatten_to_vector(g1), rtol=3e-3,
+                                   atol=1e-5)
+
+
+class TestSqrtRemat:
+    @pytest.mark.parametrize("block", [2, 4])
+    def test_grads_match_per_layer_remat(self, qwen_smoke, block):
+        cfg, params, batch = qwen_smoke
+        m0 = build_model(cfg)
+        m1 = build_model(cfg.replace(remat_block=block))
+        l0, _ = m0.loss(params, batch)
+        l1, _ = m1.loss(params, batch)
+        np.testing.assert_allclose(float(l0), float(l1), rtol=1e-6)
+        g0 = jax.grad(lambda p: m0.loss(p, batch)[0])(params)
+        g1 = jax.grad(lambda p: m1.loss(p, batch)[0])(params)
+        np.testing.assert_allclose(tree_flatten_to_vector(g0),
+                                   tree_flatten_to_vector(g1), rtol=1e-4,
+                                   atol=1e-7)
+
+    def test_non_divisor_falls_back(self, qwen_smoke):
+        cfg, params, batch = qwen_smoke  # 4 layers; block=3 doesn't divide
+        m1 = build_model(cfg.replace(remat_block=3))
+        l1, _ = m1.loss(params, batch)
+        assert np.isfinite(float(l1))
+
+
+class TestGroupedMoE:
+    def test_grouped_equals_global_when_dropless(self):
+        cfg1 = smoke_variant(get_arch("deepseek-moe-16b").model)
+        cfg2 = cfg1.replace(moe_groups=2)
+        p = init_moe(jax.random.PRNGKey(0), cfg1)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg1.d_model))
+        y1, _ = moe_ffn(cfg1, p, x, capacity_factor=8.0)
+        y2, _ = moe_ffn(cfg2, p, x, capacity_factor=8.0)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4,
+                                   atol=1e-5)
+
+    def test_group_fallback_on_indivisible(self):
+        cfg = smoke_variant(get_arch("deepseek-moe-16b").model).replace(
+            moe_groups=7)  # 7 does not divide 2*16 tokens
+        p = init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+        y, _ = moe_ffn(cfg, p, x)
+        assert y.shape == x.shape
+
+    def test_grads_flow_through_router(self):
+        cfg = smoke_variant(get_arch("deepseek-moe-16b").model).replace(
+            moe_groups=2)
+        p = init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model))
+
+        def f(p):
+            y, aux = moe_ffn(cfg, p, x)
+            return jnp.sum(y ** 2) + aux
+
+        g = jax.grad(f)(p)
+        assert float(jnp.sum(jnp.abs(g["router"]))) > 0.0
+
+
+class TestDistAccumDtype:
+    def test_bf16_accumulator_close_to_f32(self):
+        from repro.configs.base import FLConfig
+        from repro.core import init_dist_state, make_dist_step
+
+        def quad_loss(params, batch):
+            x, y = batch
+            return jnp.mean((x @ params["w"] - y) ** 2), {}
+
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (16, 4))
+        y = x @ jnp.arange(1.0, 5.0)
+        batch = {"local": (x[None], y[None]), "probe": (x, y),
+                 "tau": jnp.int32(0), "data_size": jnp.float32(10.0)}
+        params = {"w": jnp.zeros(4)}
+        outs = {}
+        for dt in ("float32", "bfloat16"):
+            fl = FLConfig(buffer_size=2, local_steps=1, local_lr=0.1,
+                          accum_dtype=dt)
+            step = jax.jit(make_dist_step(quad_loss, fl))
+            st = init_dist_state(params, fl)
+            for _ in range(2):
+                st, _ = step(st, batch)
+            outs[dt] = np.asarray(st.global_params["w"])
+        np.testing.assert_allclose(outs["bfloat16"], outs["float32"],
+                                   rtol=2e-2, atol=1e-3)

@@ -1,0 +1,77 @@
+"""Sharding-rule validation: for every assigned arch, every PartitionSpec
+produced by sharding/specs.py must evenly divide the dims it shards on the
+production mesh axes — the invariant the dry-run relies on. Runs on the
+abstract shapes only (no 512-device init needed: divisibility is static).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, list_archs
+from repro.models import build_model
+from repro.sharding import specs as S
+
+AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+class _FakeMesh:
+    """Duck-typed mesh carrying only axis names/sizes for the rule code."""
+
+    def __init__(self, axes=("data", "model")):
+        self.axis_names = tuple(axes)
+        self.devices = np.empty(tuple(AXIS_SIZES[a] for a in axes))
+
+
+def _check_spec_tree(shape_tree, spec_tree, mesh):
+    flat_s, _ = jax.tree_util.tree_flatten_with_path(
+        spec_tree, is_leaf=lambda x: isinstance(x, type(jax.sharding.PartitionSpec())))
+    flat_l, _ = jax.tree_util.tree_flatten_with_path(shape_tree)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    by_path = {jax.tree_util.keystr(p): l for p, l in flat_l}
+    bad = []
+    for p, spec in flat_s:
+        leaf = by_path[jax.tree_util.keystr(p)]
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = int(np.prod([sizes[a] for a in axes]))
+            if dim % n:
+                bad.append((jax.tree_util.keystr(p), leaf.shape, spec))
+    return bad
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("fsdp", [False, True])
+def test_param_specs_divisible(arch, fsdp):
+    cfg = get_arch(arch).model
+    model = build_model(cfg)
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    mesh = _FakeMesh()
+    pspecs = S.param_pspecs(params_sds, mesh, fsdp=fsdp)
+    bad = _check_spec_tree(params_sds, pspecs, mesh)
+    assert not bad, bad[:5]
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "falcon-mamba-7b",
+                                  "whisper-tiny", "hymba-1.5b"])
+def test_cache_specs_divisible(arch):
+    cfg = get_arch(arch).model
+    model = build_model(cfg)
+    cache_sds = jax.eval_shape(lambda: model.init_cache(128, 1024))
+    mesh = _FakeMesh()
+    cspecs = S.cache_pspecs(cache_sds, mesh, batch_axes=("data",))
+    bad = _check_spec_tree(cache_sds, cspecs, mesh)
+    assert not bad, bad[:5]
+
+
+def test_tp_weights_actually_sharded():
+    """The rules must shard the big matmul weights, not silently replicate."""
+    cfg = get_arch("qwen3-1.7b").model
+    model = build_model(cfg)
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = S.param_pspecs(params_sds, _FakeMesh(), fsdp=False)
+    layer_specs = pspecs["layers"]
+    assert "model" in tuple(layer_specs["attn"]["wq"])
+    assert "model" in tuple(layer_specs["mlp"]["w_down"])
+    assert "model" in tuple(pspecs["embed"])  # vocab or d sharded

@@ -1,0 +1,121 @@
+"""Unit + property tests for the paper's weighting equations (core/weighting)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.weighting import (
+    POLICIES,
+    contribution_weights,
+    staleness_degree,
+    statistical_effect,
+)
+
+finite_pos = st.floats(min_value=1e-6, max_value=1e6, allow_nan=False,
+                       allow_infinity=False)
+
+
+class TestStalenessDegree:
+    def test_freshest_client_gets_one(self):
+        d = jnp.array([4.0, 1.0, 9.0])
+        s = staleness_degree(d)
+        assert float(s[1]) == pytest.approx(1.0, rel=1e-5)
+        assert float(s[0]) == pytest.approx(0.25, rel=1e-4)
+        assert float(s[2]) == pytest.approx(1.0 / 9.0, rel=1e-4)
+
+    def test_all_zero_distances(self):
+        # round 0: nobody stale -> everyone fully fresh
+        s = staleness_degree(jnp.zeros(4))
+        np.testing.assert_allclose(np.asarray(s), 1.0, rtol=1e-5)
+
+    def test_zero_min_with_stale_others(self):
+        s = staleness_degree(jnp.array([0.0, 5.0]))
+        assert float(s[0]) == pytest.approx(1.0)
+        assert float(s[1]) < 1e-6
+
+    @given(st.lists(finite_pos, min_size=2, max_size=16))
+    @settings(max_examples=50, deadline=None)
+    def test_range_and_argmin_property(self, dists):
+        d = jnp.asarray(dists, jnp.float32)
+        s = np.asarray(staleness_degree(d))
+        assert (s > 0).all() and (s <= 1.0 + 1e-6).all()
+        assert s[int(np.argmin(dists))] == pytest.approx(1.0, rel=1e-4)
+
+    @given(st.lists(finite_pos, min_size=2, max_size=8),
+           st.floats(min_value=0.5, max_value=100.0))
+    @settings(max_examples=30, deadline=None)
+    def test_scale_invariance(self, dists, scale):
+        # eq. 3 is a ratio: rescaling all distances leaves S unchanged
+        d = jnp.asarray(dists, jnp.float32)
+        s1 = np.asarray(staleness_degree(d))
+        s2 = np.asarray(staleness_degree(d * scale))
+        np.testing.assert_allclose(s1, s2, rtol=1e-3, atol=1e-5)
+
+
+class TestStatisticalEffect:
+    def test_eq4_product(self):
+        p = statistical_effect(jnp.array([0.5, 2.0]), jnp.array([100.0, 10.0]))
+        np.testing.assert_allclose(np.asarray(p), [50.0, 20.0], rtol=1e-6)
+
+    def test_higher_loss_higher_weight(self):
+        p = statistical_effect(jnp.array([1.0, 3.0]), jnp.array([10.0, 10.0]))
+        assert float(p[1]) > float(p[0])
+
+
+class TestContributionWeights:
+    def test_paper_policy_divides_by_staleness(self):
+        p = jnp.array([1.0, 1.0])
+        s = jnp.array([1.0, 0.5])
+        tau = jnp.zeros(2)
+        w = contribution_weights("paper", p, s, tau, normalize="none")
+        # literal eq. 5: w = P / S
+        np.testing.assert_allclose(np.asarray(w), [1.0, 2.0], rtol=1e-6)
+
+    def test_paper_s_min_floor(self):
+        p = jnp.ones(2)
+        s = jnp.array([1.0, 1e-9])
+        w = contribution_weights("paper", p, s, jnp.zeros(2), s_min=1e-3,
+                                 normalize="none")
+        assert float(w[1]) == pytest.approx(1e3, rel=1e-4)
+
+    def test_fedbuff_uniform(self):
+        w = contribution_weights("fedbuff", jnp.array([5.0, 1.0]),
+                                 jnp.array([0.1, 1.0]), jnp.zeros(2))
+        np.testing.assert_allclose(np.asarray(w), 1.0, rtol=1e-6)
+
+    def test_polynomial_matches_cited_form(self):
+        tau = jnp.array([0.0, 3.0])
+        w = contribution_weights("polynomial", jnp.ones(2), jnp.ones(2), tau,
+                                 poly_a=0.5, normalize="none")
+        np.testing.assert_allclose(np.asarray(w), [1.0, 0.5], rtol=1e-6)
+
+    @given(st.lists(finite_pos, min_size=2, max_size=8),
+           st.lists(st.floats(min_value=1e-3, max_value=1.0), min_size=2,
+                    max_size=8))
+    @settings(max_examples=40, deadline=None)
+    def test_mean_normalization(self, ps, ss):
+        n = min(len(ps), len(ss))
+        p, s = jnp.asarray(ps[:n]), jnp.asarray(ss[:n])
+        w = np.asarray(contribution_weights("paper", p, s, jnp.zeros(n),
+                                            normalize="mean"))
+        assert np.mean(w) == pytest.approx(1.0, rel=1e-3)
+
+    def test_arrival_mask_zeroes_and_renormalizes(self):
+        p = jnp.ones(4)
+        s = jnp.ones(4)
+        mask = jnp.array([1.0, 1.0, 0.0, 1.0])
+        w = np.asarray(contribution_weights("paper", p, s, jnp.zeros(4),
+                                            arrival_mask=mask))
+        assert w[2] == 0.0
+        assert np.sum(w) == pytest.approx(3.0, rel=1e-4)  # mean 1 over arrived
+
+    def test_unknown_policy_raises(self):
+        with pytest.raises(ValueError):
+            contribution_weights("nope", jnp.ones(2), jnp.ones(2), jnp.zeros(2))
+
+    def test_all_policies_finite(self):
+        for pol in POLICIES:
+            w = contribution_weights(pol, jnp.array([1.0, 2.0]),
+                                     jnp.array([0.5, 1.0]), jnp.array([1.0, 0.0]))
+            assert np.isfinite(np.asarray(w)).all()
