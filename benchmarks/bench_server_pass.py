@@ -1,59 +1,170 @@
-"""Server aggregation pass scalability: time per CA-AFL server round vs
-model size and buffer K (the memory-bound hot loop the weighted_agg kernel
-targets). Demonstrates O(K*N) streaming cost and the staleness-distance
-overhead of eq. (3) relative to plain FedBuff averaging.
+"""Server aggregation pass: seed looped-host vs device-resident passes.
+
+The seed ``AsyncServer._do_aggregate`` ran a Python loop with a
+``float()`` host sync per buffered entry for both the eq. 3 distance and
+the eq. 4 probe — O(K) device<->host round-trips plus O(K) dispatches
+per round. This benchmark reproduces that path faithfully ("looped") and
+compares it against the single jitted server pass
+(repro/core/server_pass.py):
+
+  batched : one compiled program; eq. 3 / eq. 5 via the two weighted_agg
+            Pallas kernels on TPU, the pure-jnp body elsewhere (Mosaic
+            kernels need a TPU; interpret mode is validation-only).
+  fused   : the one-launch two-phase kernel (TPU only).
+
+Sweeps K in {4, 8, 16, 32} and model sizes from lenet_fmnist up. Writes
+``results/bench/server_pass.csv`` and the acceptance artifact
+``BENCH_server_pass.json`` at the repo root.
 """
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import time_fn, write_csv
+from repro.configs.base import FLConfig
 from repro.core.aggregation import aggregate
-from repro.core.weighting import contribution_weights, staleness_degree
-from repro.utils.pytree import tree_sq_dist
+from repro.core.server_pass import make_server_pass
+from repro.core.weighting import (
+    contribution_weights,
+    staleness_degree,
+    statistical_effect,
+)
+from repro.models.lenet import init_lenet, lenet_loss
+from repro.utils.pytree import tree_count_params, tree_sq_dist, tree_stack
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+KS = (4, 8, 16, 32)
 
 
-def _fake_params(n, key):
-    return {"w": jax.random.normal(key, (n,))}
+def _vec_loss(params, batch):
+    """Cheap probe loss for the synthetic flat models."""
+    x, = batch
+    return jnp.mean((params["w"][:256] * x) ** 2), {}
+
+
+def _models(quick: bool):
+    key = jax.random.PRNGKey(0)
+    out = [("lenet_fmnist", init_lenet(key), lenet_loss,
+            (jnp.zeros((8, 28, 28, 1)), jnp.zeros((8,), jnp.int32)))]
+    sizes = [("mlp_1m", 1 << 20)] if quick else [("mlp_1m", 1 << 20),
+                                                 ("mlp_16m", 1 << 24)]
+    for name, n in sizes:
+        out.append((name, {"w": jax.random.normal(key, (n,))}, _vec_loss,
+                    (jax.random.normal(key, (256,)),)))
+    return out
+
+
+def _make_case(params, k):
+    deltas = [jax.tree.map(
+        lambda l, i=i: 1e-3 * (i + 1) * jnp.ones_like(l), params)
+        for i in range(k)]
+    bases = [jax.tree.map(lambda l, i=i: l + 1e-2 * i, params)
+             for i in range(k)]
+    sizes = jnp.linspace(10.0, 50.0, k)
+    taus = jnp.arange(k, dtype=jnp.float32)
+    return deltas, bases, sizes, taus
+
+
+def _make_looped(fl, loss_fn):
+    """The seed hot path: K host syncs for eq. 3 + K for eq. 4 per round."""
+    _sq = jax.jit(tree_sq_dist)
+    _fresh = jax.jit(lambda p, b: loss_fn(p, b)[0])
+    _agg = jax.jit(lambda p, d, w, k: aggregate(p, d, w, fl.global_lr, k),
+                   static_argnames=("k",))
+
+    def round_fn(params, deltas, bases, probe, sizes, taus):
+        k = len(deltas)
+        dists = [float(_sq(params, b)) for b in bases]  # K host syncs
+        s = staleness_degree(jnp.asarray(dists, jnp.float32))
+        losses = [float(_fresh(params, probe)) for _ in range(k)]  # K more
+        p = statistical_effect(jnp.asarray(losses, jnp.float32), sizes)
+        w = contribution_weights(fl.weighting, p, s, taus, s_min=fl.s_min,
+                                 poly_a=fl.poly_a, normalize=fl.normalize)
+        new, _ = _agg(params, tree_stack(deltas), w, k)
+        return new
+
+    return round_fn
 
 
 def run(quick: bool = False):
-    key = jax.random.PRNGKey(0)
-    sizes = [1 << 16, 1 << 20] if quick else [1 << 16, 1 << 20, 1 << 24]
-    rows = []
-    for n in sizes:
-        for k in (4, 16):
-            x = _fake_params(n, key)
-            deltas = jax.tree.map(
-                lambda l: jnp.stack([l * (i + 1) * 1e-3 for i in range(k)]), x)
-            bases = [jax.tree.map(lambda l, i=i: l + 1e-2 * i, x)
-                     for i in range(k)]
+    backend = jax.default_backend()
+    on_tpu = backend == "tpu"
+    rows, json_rows = [], []
+    for model_name, params, loss_fn, probe in _models(quick):
+        n_params = tree_count_params(params)
+        for k in KS:
+            fl = FLConfig(buffer_size=k, weighting="paper")
+            deltas, bases, sizes, taus = _make_case(params, k)
+            looped = _make_looped(fl, loss_fn)
+            t_looped = time_fn(looped, params, deltas, bases, probe, sizes,
+                               taus, iters=3)
 
-            @jax.jit
-            def fedbuff_round(x, deltas):
-                return aggregate(x, deltas, jnp.ones(k), 1.0, k)[0]
+            deltas_st, bases_st = tree_stack(deltas), tree_stack(bases)
+            probes_st = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (k,) + x.shape), probe)
+            mask = jnp.ones(k)
 
-            @jax.jit
-            def ca_round(x, deltas, bases_stacked, p):
-                d = jax.vmap(lambda b: tree_sq_dist(x, b))(bases_stacked)
-                s = staleness_degree(d)
-                w = contribution_weights("paper", p, s, jnp.zeros(k))
-                return aggregate(x, deltas, w, 1.0, k)[0]
+            def timed_pass(mode):
+                pass_fn = make_server_pass(fl, lambda p, b: loss_fn(p, b)[0],
+                                           mode=mode, interpret=False)
+                return time_fn(pass_fn, params, deltas_st, bases_st,
+                               probes_st, mask, sizes, taus, iters=3)
 
-            bases_stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *bases)
-            p = jnp.abs(jax.random.normal(key, (k,))) + 0.5
-            t_fb = time_fn(fedbuff_round, x, deltas, iters=3)
-            t_ca = time_fn(ca_round, x, deltas, bases_stacked, p, iters=3)
-            overhead = t_ca / t_fb
-            rows.append([n, k, round(t_fb, 1), round(t_ca, 1),
-                         round(overhead, 3)])
-            print(f"  N={n:>9d} K={k:>3d} fedbuff={t_fb:>10.1f}us "
-                  f"ca-afl={t_ca:>10.1f}us overhead=x{overhead:.2f}")
+            batched_mode = "batched" if on_tpu else "reference"
+            t_batched = timed_pass(batched_mode)
+            t_fused = timed_pass("fused") if on_tpu else None
+
+            sp_b = t_looped / t_batched
+            sp_f = (t_looped / t_fused) if t_fused else None
+            rows.append([model_name, n_params, k, round(t_looped, 1),
+                         round(t_batched, 1),
+                         round(t_fused, 1) if t_fused else "",
+                         round(sp_b, 2), round(sp_f, 2) if sp_f else ""])
+            json_rows.append({
+                "model": model_name, "n_params": n_params, "K": k,
+                "looped_us": t_looped, "batched_us": t_batched,
+                "batched_mode": batched_mode,  # pure-jnp body off-TPU
+                "fused_us": t_fused, "speedup_batched": sp_b,
+                "speedup_fused": sp_f,
+            })
+            fused_str = f" fused={t_fused:>9.1f}us" if t_fused else ""
+            print(f"  {model_name:>12s} N={n_params:>9d} K={k:>3d} "
+                  f"looped={t_looped:>9.1f}us batched={t_batched:>9.1f}us"
+                  f"{fused_str} speedup=x{sp_b:.2f}")
+
     path = write_csv("server_pass.csv",
-                     ["params", "K", "fedbuff_us", "ca_afl_us", "overhead"],
-                     rows)
+                     ["model", "params", "K", "looped_us", "batched_us",
+                      "fused_us", "speedup_batched", "speedup_fused"], rows)
+    accept = [r for r in json_rows
+              if r["model"] == "lenet_fmnist" and r["K"] == 16]
+    payload = {
+        "meta": {
+            "backend": backend,
+            "quick": quick,
+            "note": ("batched = single jitted server pass (Pallas kernels "
+                     "on TPU, XLA body elsewhere); fused = one-launch "
+                     "two-phase kernel, TPU only; looped = seed host loop "
+                     "with 2K syncs/round"),
+        },
+        "rows": json_rows,
+        "acceptance": {
+            "model": "lenet_fmnist", "K": 16,
+            "mode": accept[0]["batched_mode"] if accept else None,
+            "speedup_batched": accept[0]["speedup_batched"] if accept else None,
+            "threshold": 2.0,
+            "pass": bool(accept and accept[0]["speedup_batched"] >= 2.0),
+        },
+    }
+    json_path = os.path.join(ROOT, "BENCH_server_pass.json")
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
     print(f"  wrote {path}")
+    print(f"  wrote {json_path} (K=16 lenet speedup "
+          f"x{payload['acceptance']['speedup_batched']:.2f})")
     return rows
 
 

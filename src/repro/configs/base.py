@@ -152,6 +152,10 @@ class FLConfig:
     # perf knobs (EXPERIMENTS.md §Perf)
     accum_dtype: str = "float32"  # distributed-mode delta accumulator dtype
     probe_batch: int = 4  # eq.-4 probe sequences per data-parallel group
+    # device-resident server pass (DESIGN.md §3): auto picks the fused
+    # Pallas kernel on TPU and the pure-jnp reference body elsewhere
+    server_pass_mode: str = "auto"  # auto | reference | batched | fused
+    server_pass_block_n: int = 0  # kernel N-tile; 0 = auto (lane-aligned)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -10,6 +10,16 @@ from repro.core.cohort import (  # noqa: F401
     make_dist_step,
 )
 from repro.core.server import AsyncServer, SyncServer  # noqa: F401
+from repro.core.server_pass import (  # noqa: F401
+    FlatSpec,
+    apply_server_round,
+    flatten_stacked,
+    flatten_tree,
+    make_flat_spec,
+    make_server_pass,
+    resolve_mode,
+    unflatten_like,
+)
 from repro.core.simulator import LatencyModel, SimResult, run_async, run_sync  # noqa: F401
 from repro.core.weighting import (  # noqa: F401
     POLICIES,

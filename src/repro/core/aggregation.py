@@ -26,19 +26,21 @@ def aggregate(global_params, deltas_stacked, weights, eta_g: float, k: int):
 
 def aggregate_fused(global_params, deltas_stacked, weights, eta_g: float, k: int,
                     interpret: bool = True):
-    """Same maths via the Pallas kernel (flattened per-leaf)."""
-    from repro.kernels.weighted_agg.ops import weighted_sum as pallas_ws
+    """Same maths via ONE Pallas launch over the whole flattened tree.
 
-    scale = eta_g / float(k)
-    w = weights.astype(jnp.float32) * scale
+    The FlatSpec adapter (repro/core/server_pass.py) concatenates and
+    zero-pads all leaves to one lane-aligned (K, Np) array, so a single
+    kernel streams every parameter once instead of one launch per leaf.
+    """
+    from repro.core.server_pass import (
+        flatten_stacked, flatten_tree, make_flat_spec, unflatten_like)
+    from repro.kernels.weighted_agg import kernel as _k
 
-    def leaf_update(x, d):
-        dk = d.reshape(d.shape[0], -1)  # (K, n)
-        u = pallas_ws(dk.astype(jnp.float32), w, interpret=interpret)
-        return (x.astype(jnp.float32) - u.reshape(x.shape)).astype(x.dtype), \
-            u.reshape(x.shape).astype(x.dtype)
-
-    pairs = jax.tree.map(leaf_update, global_params, deltas_stacked)
-    new = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda t: isinstance(t, tuple))
-    upd = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda t: isinstance(t, tuple))
-    return new, upd
+    spec = make_flat_spec(global_params)
+    x = flatten_tree(spec, global_params)
+    d = flatten_stacked(spec, deltas_stacked)
+    w = weights.astype(jnp.float32) * (eta_g / float(k))
+    u = _k.weighted_sum_pallas(d, w, block_n=spec.block_n,
+                               interpret=interpret)
+    return (unflatten_like(spec, x - u, global_params),
+            unflatten_like(spec, u, global_params))

@@ -51,5 +51,10 @@ class VersionHistory:
     def get(self, version: int) -> Optional[Any]:
         return self._snaps.get(version)
 
+    def oldest(self) -> int:
+        """Oldest version still in the ring (fallback base for updates
+        whose true snapshot was pruned: treated as max-stale)."""
+        return min(self._snaps)
+
     def __contains__(self, version: int) -> bool:
         return version in self._snaps

@@ -31,8 +31,15 @@ import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
 from repro.core.client import make_local_update_fn
-from repro.core.weighting import contribution_weights, staleness_degree, statistical_effect
-from repro.utils.pytree import tree_sq_dist, tree_sub, tree_weighted_sum
+from repro.core.server_pass import (
+    apply_server_round,
+    flatten_stacked,
+    flatten_tree,
+    make_flat_spec,
+    resolve_mode,
+    unflatten_like,
+)
+from repro.utils.pytree import tree_sq_dist, tree_sub
 
 
 # ---------------------------------------------------------------------------
@@ -76,6 +83,7 @@ def make_cohort_step(loss_fn: Callable, fl: FLConfig) -> Callable:
     """
     local_update = make_local_update_fn(loss_fn, fl.local_steps, fl.local_lr,
                                         fl.local_momentum)
+    mode, interpret = resolve_mode(fl.server_pass_mode)
 
     def step(state: CohortState, batch: Dict[str, Any]):
         arrival = batch["arrival"].astype(jnp.float32)
@@ -88,26 +96,22 @@ def make_cohort_step(loss_fn: Callable, fl: FLConfig) -> Callable:
         # cumulative upload delta measured from the pulled base (Delta_i)
         up_delta = jax.vmap(tree_sub)(state.client_base, end_params)
 
-        # --- eq. 3: exact staleness degree -------------------------------
-        dist = jax.vmap(lambda b: tree_sq_dist(state.global_params, b))(
-            state.client_base)
-        s = staleness_degree(dist)
-
         # --- eq. 4: fresh-loss probe of x^t ------------------------------
         fresh = jax.vmap(lambda pb: loss_fn(state.global_params, pb)[0],
                          in_axes=(0,))(batch["probe"])
-        p = statistical_effect(fresh, batch["data_sizes"])
 
-        # --- eq. 5: contribution-aware masked aggregation ----------------
+        # --- eq. 3 + 5 via the shared device-resident server pass --------
+        spec = make_flat_spec(state.global_params, fl.server_pass_block_n)
         tau = (state.version - state.client_version).astype(jnp.float32)
-        w = contribution_weights(fl.weighting, p, s, tau, s_min=fl.s_min,
-                                 poly_a=fl.poly_a, normalize=fl.normalize,
-                                 arrival_mask=arrival)
-        k_eff = jnp.maximum(jnp.sum(arrival), 1.0)
-        w_scaled = w * (fl.global_lr / k_eff)
-        update = tree_weighted_sum(up_delta, w_scaled)
-        new_global = jax.tree.map(lambda x, u: (x - u.astype(x.dtype)),
-                                  state.global_params, update)
+        new_x, info = apply_server_round(
+            flatten_tree(spec, state.global_params),
+            flatten_stacked(spec, state.client_base),
+            flatten_stacked(spec, up_delta),
+            fresh.astype(jnp.float32), batch["data_sizes"], tau, fl,
+            arrival_mask=arrival, mode=mode, block_n=spec.block_n,
+            interpret=interpret)
+        s, w = info["staleness"], info["weights"]
+        new_global = unflatten_like(spec, new_x, state.global_params)
 
         # --- arrivals re-sync; stragglers keep their local progress ------
         def resync(stacked_new_src, stacked_old):

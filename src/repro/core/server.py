@@ -4,8 +4,15 @@
 aggregation with *exact* eq.-3 staleness (snapshot-based distances), plus
 the baseline policies via ``FLConfig.weighting``. ``SyncServer`` is FedAvg.
 
+The per-round maths runs entirely through the device-resident server pass
+(repro/core/server_pass.py): one jitted program computes eq. 3 + 4 + 5
+over the stacked K buffered updates, and the only device->host transfer
+per aggregation round is a single ``jax.device_get`` of the (K,)-sized
+round log (tested in tests/test_server_pass.py).
+
 The O(1)-memory sharded-ring variant used by the compiled production step
-lives in repro/core/cohort.py; tests check the two agree.
+lives in repro/core/cohort.py; tests check the two agree
+(tests/test_fl_system.py::TestServerCohortAgreement).
 """
 from __future__ import annotations
 
@@ -18,8 +25,8 @@ import numpy as np
 from repro.configs.base import FLConfig
 from repro.core.aggregation import aggregate
 from repro.core.buffer import BufferEntry, UpdateBuffer, VersionHistory
-from repro.core.weighting import contribution_weights, staleness_degree, statistical_effect
-from repro.utils.pytree import tree_sq_dist, tree_stack
+from repro.core.server_pass import make_server_pass
+from repro.utils.pytree import tree_stack
 
 
 class AsyncServer:
@@ -33,10 +40,9 @@ class AsyncServer:
         self.buffer = UpdateBuffer(fl.buffer_size)
         self.history = VersionHistory(fl.max_staleness)
         self.history.put(0, init_params)
-        self._fresh_loss = jax.jit(fresh_loss_fn)
-        self._sq_dist = jax.jit(tree_sq_dist)
-        self._aggregate = jax.jit(
-            lambda p, d, w: aggregate(p, d, w, fl.global_lr, fl.buffer_size))
+        self._pass = make_server_pass(fl, fresh_loss_fn)
+        self._fresh_loss = (None if fresh_loss_fn is None
+                            else jax.jit(fresh_loss_fn))
         self.round_log: List[Dict] = []
 
     # ------------------------------------------------------------------
@@ -58,48 +64,71 @@ class AsyncServer:
         return False
 
     # ------------------------------------------------------------------
+    def _gather_probes(self, entries):
+        """Probe batches for the eq.-4 fresh-loss term.
+
+        Returns (probes, mask, losses): uniformly-shaped batches stack
+        into one (K, ...) pytree for the vmapped probe inside the pass
+        (``losses=None``); heterogeneous batches fall back to K separate
+        jitted loss calls whose device scalars are stacked — still zero
+        device->host syncs, the pass just skips its own probe. Probe
+        callbacks run on the host (they fetch client data), but batches
+        only ever transfer host->device.
+        """
+        if self._fresh_loss is None:
+            return None, None, None
+        raw = [e.fresh_batch_fn() if getattr(e, "fresh_batch_fn", None)
+               else None for e in entries]
+        proto = next((b for b in raw if b is not None), None)
+        if proto is None:
+            return None, None, None
+        mask = jnp.asarray([0.0 if b is None else 1.0 for b in raw],
+                           jnp.float32)
+        batches = [proto if b is None else b for b in raw]
+
+        def layout(b):  # shapes only — no host->device transfer
+            return jax.tree.map(lambda x: tuple(np.shape(x)), b)
+
+        if all(layout(b) == layout(proto) for b in batches):
+            probes = jax.tree.map(lambda *xs: jnp.stack(
+                [jnp.asarray(x) for x in xs]), *batches)
+            return probes, mask, None
+        losses = jnp.stack([self._fresh_loss(self.params, b)
+                            for b in batches]).astype(jnp.float32)
+        return None, mask, jnp.where(mask > 0, losses, 1.0)
+
     def _do_aggregate(self) -> None:
-        fl = self.fl
         entries = self.buffer.drain()
         k = len(entries)
 
-        # eq. 3 — exact distances from snapshots
-        dists = []
-        taus = []
+        bases, taus = [], []
         for e in entries:
             base = self.history.get(e.base_version)
             if base is None:  # older than the ring: treat as max-stale
-                oldest = min(v for v in range(self.version + 1)
-                             if v in self.history)
-                base = self.history.get(oldest)
-            dists.append(float(self._sq_dist(self.params, base)))
+                base = self.history.get(self.history.oldest())
+            bases.append(base)
             taus.append(self.version - e.base_version)
-        sq_dists = jnp.asarray(dists, jnp.float32)
-        s = staleness_degree(sq_dists)
 
-        # eq. 4 — fresh-loss probe of x^t on each buffered client's data
-        losses = []
-        for e in entries:
-            if getattr(e, "fresh_batch_fn", None) is not None:
-                losses.append(float(self._fresh_loss(self.params, e.fresh_batch_fn())))
-            else:
-                losses.append(1.0)
-        p = statistical_effect(jnp.asarray(losses, jnp.float32),
-                               jnp.asarray([e.data_size for e in entries], jnp.float32))
-
-        w = contribution_weights(fl.weighting, p, s,
-                                 jnp.asarray(taus, jnp.float32),
-                                 s_min=fl.s_min, poly_a=fl.poly_a,
-                                 normalize=fl.normalize)
-        stacked = tree_stack([e.delta for e in entries])
-        self.params, _ = self._aggregate(self.params, stacked, w)
+        probes, probe_mask, losses = self._gather_probes(entries)
+        new_params, info = self._pass(
+            self.params,
+            tree_stack([e.delta for e in entries]),
+            tree_stack(bases),
+            probes, probe_mask,
+            jnp.asarray([e.data_size for e in entries], jnp.float32),
+            jnp.asarray(taus, jnp.float32),
+            losses)
+        self.params = new_params
         self.version += 1
         self.history.put(self.version, self.params)
+
+        log = jax.device_get(info)  # the round's single device->host sync
         self.round_log.append({
             "version": self.version,
-            "weights": np.asarray(w).tolist(),
-            "staleness_deg": np.asarray(s).tolist(),
-            "stat_effect": np.asarray(p).tolist(),
+            "weights": log["weights"].tolist(),
+            "staleness_deg": log["staleness"].tolist(),
+            "stat_effect": log["stat_effect"].tolist(),
+            "sq_dists": log["sq_dists"].tolist(),
             "tau": taus,
             "clients": [e.client_id for e in entries],
             "k": k,

@@ -1,0 +1,241 @@
+"""Device-resident contribution-aware server pass (DESIGN.md §3).
+
+One compiled program computes the paper's whole per-round server maths —
+eq. 3 staleness distances, the eq. 4 fresh-loss probe, the weighting
+policy, and the eq. 5 reduction — over the stacked K buffered updates.
+The seed implementation looped on the host with a ``float()`` sync per
+buffered entry (O(K) device<->host round-trips per round); this module is
+the single jitted entry point that replaces it for ``AsyncServer``, the
+compiled cohort step, and ``aggregate_fused``.
+
+Dataflow (all inside one ``jax.jit``):
+
+    params pytree ──flatten/pad──> x (Np,)          f32
+    deltas  (K, ...) ──flatten──>  d (K, Np)         f32
+    bases   (K, ...) ──flatten──>  b (K, Np)         f32
+    probes  (K, ...) ──vmap loss─> losses (K,)          (eq. 4)
+    dists_k = ||x - b_k||^2                             (eq. 3)
+    w = contribution_weights(policy, N_i * losses, S(dists), tau)
+    x' = x - eta_g / k_eff * sum_k w_k d_k              (eq. 5)
+    x' ──unflatten──> new params pytree (original dtypes)
+
+The flatten/pad adapter zero-pads the concatenated parameter vector to a
+lane-aligned tile multiple, which is distance- and sum-neutral, so the
+Pallas kernels' ``N % block_n == 0`` contract holds for arbitrary models.
+
+Modes (``FLConfig.server_pass_mode``):
+  reference : pure-jnp body — one XLA program, runs everywhere;
+  batched   : eq. 3 via ``sq_dists_pallas`` (one HBM pass for all K) and
+              eq. 5 via ``weighted_sum_pallas`` — two kernel launches;
+  fused     : ``fused_server_pallas`` — eq. 3 + weighting + eq. 5 in a
+              single two-phase kernel launch (bases and deltas each read
+              from HBM exactly once);
+  auto      : fused on TPU, reference elsewhere (Mosaic kernels need a
+              TPU; ``interpret=True`` is validation-only).
+
+Host-sync contract: callers receive the new params and a dict of (K,)
+info arrays, all device-resident. ``AsyncServer`` reads the info back
+with ONE ``jax.device_get`` for its round log — at most 2 host syncs per
+aggregation round, tested in tests/test_server_pass.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core.weighting import (
+    contribution_weights,
+    staleness_degree,
+    statistical_effect,
+)
+from repro.kernels.weighted_agg import kernel as _k
+from repro.kernels.weighted_agg import ops as _ops
+
+MODES = ("auto", "reference", "batched", "fused")
+
+
+def resolve_mode(mode: str, interpret: Optional[bool] = None) -> Tuple[str, bool]:
+    """Map ``auto`` to a backend-appropriate concrete mode.
+
+    Mosaic kernels compile only for TPU; everywhere else ``interpret=True``
+    would run them tile-by-tile in Python (validation-only), so ``auto``
+    falls back to the pure-jnp reference body — still one compiled,
+    device-resident program.
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown server_pass_mode {mode!r}; valid: {MODES}")
+    on_tpu = jax.default_backend() == "tpu"
+    if interpret is None:
+        interpret = not on_tpu
+    if mode == "auto":
+        mode = "fused" if on_tpu else "reference"
+    return mode, interpret
+
+
+# ---------------------------------------------------------------------------
+# pytree flatten / pad / unflatten adapter
+# ---------------------------------------------------------------------------
+
+
+class FlatSpec(NamedTuple):
+    """Static layout of a pytree flattened to one padded f32 vector."""
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    sizes: Tuple[int, ...]
+    n: int  # true parameter count
+    n_padded: int  # lane-aligned, block-divisible length
+    block_n: int  # tile the kernels run with
+
+
+def make_flat_spec(template: Any, block_n: int = 0) -> FlatSpec:
+    """Build the flatten layout for ``template`` (works under tracing)."""
+    leaves, treedef = jax.tree.flatten(template)
+    shapes = tuple(tuple(x.shape) for x in leaves)
+    dtypes = tuple(x.dtype for x in leaves)
+    sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+    n = sum(sizes)
+    block = block_n or _ops.pick_block(n)
+    return FlatSpec(treedef, shapes, dtypes, sizes, n,
+                    _ops.pad_to(n, block), block)
+
+
+def flatten_tree(spec: FlatSpec, tree: Any) -> jnp.ndarray:
+    """pytree -> (n_padded,) f32, zero-padded (distance/sum neutral)."""
+    leaves = jax.tree.leaves(tree)
+    flat = jnp.concatenate([x.astype(jnp.float32).reshape(-1) for x in leaves])
+    if spec.n_padded != spec.n:
+        flat = jnp.pad(flat, (0, spec.n_padded - spec.n))
+    return flat
+
+
+def flatten_stacked(spec: FlatSpec, stacked: Any) -> jnp.ndarray:
+    """pytree with (K, ...) leaves -> (K, n_padded) f32."""
+    leaves = jax.tree.leaves(stacked)
+    k = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [x.astype(jnp.float32).reshape(k, -1) for x in leaves], axis=1)
+    if spec.n_padded != spec.n:
+        flat = jnp.pad(flat, ((0, 0), (0, spec.n_padded - spec.n)))
+    return flat
+
+
+def unflatten_like(spec: FlatSpec, vec: jnp.ndarray, template: Any) -> Any:
+    """(n_padded,) or (n,) f32 -> pytree with the template's dtypes."""
+    leaves = []
+    off = 0
+    for shape, dtype, size in zip(spec.shapes, spec.dtypes, spec.sizes):
+        leaves.append(vec[off:off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# the round core (shared by AsyncServer, cohort step, and the benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def apply_server_round(x: jnp.ndarray, bases: jnp.ndarray,
+                       deltas: jnp.ndarray, losses: jnp.ndarray,
+                       data_sizes: jnp.ndarray, taus: jnp.ndarray,
+                       fl: FLConfig, *,
+                       arrival_mask: Optional[jnp.ndarray] = None,
+                       mode: str = "reference", block_n: int = 0,
+                       interpret: bool = False):
+    """eq. 3 + 4 + 5 on flat arrays. Returns (new_x, info dict of (K,)).
+
+    x: (Np,), bases/deltas: (K, Np) — already padded to a ``block_n``
+    multiple (zeros), e.g. by the FlatSpec adapter. losses/data_sizes/
+    taus: (K,). ``arrival_mask`` zeroes absent cohort slots (weights AND
+    the k_eff divisor), matching ``contribution_weights``.
+    """
+    p = statistical_effect(losses, data_sizes)
+    k = bases.shape[0]
+    mask = (jnp.ones((k,), jnp.float32) if arrival_mask is None
+            else arrival_mask.astype(jnp.float32))
+    block = block_n or _ops.pick_block(x.shape[0])
+    taus = taus.astype(jnp.float32)
+
+    if mode == "fused":
+        upd, dists, w = _ops.server_update(
+            x, bases, deltas, p, taus, mask, policy=fl.weighting,
+            eta_g=fl.global_lr, s_min=fl.s_min, poly_a=fl.poly_a,
+            normalize=fl.normalize, block_n=block, interpret=interpret)
+        s = staleness_degree(dists)
+        new_x = x - upd
+    else:
+        if mode == "batched":
+            dists = _k.sq_dists_pallas(x, bases, block_n=block,
+                                       interpret=interpret)
+        elif mode == "reference":
+            diff = bases - x[None]
+            dists = jnp.sum(diff * diff, axis=1)
+        else:
+            raise ValueError(f"unknown concrete mode {mode!r}")
+        s = staleness_degree(dists)
+        w = contribution_weights(fl.weighting, p, s, taus, s_min=fl.s_min,
+                                 poly_a=fl.poly_a, normalize=fl.normalize,
+                                 arrival_mask=None if arrival_mask is None
+                                 else mask)
+        k_eff = jnp.maximum(jnp.sum(mask), 1.0)
+        w_scaled = w * (fl.global_lr / k_eff)
+        if mode == "batched":
+            upd = _k.weighted_sum_pallas(deltas, w_scaled, block_n=block,
+                                         interpret=interpret)
+        else:
+            upd = jnp.einsum("kn,k->n", deltas, w_scaled)
+        new_x = x - upd
+
+    info = {"sq_dists": dists, "staleness": s, "stat_effect": p,
+            "weights": w, "fresh_loss": losses}
+    return new_x, info
+
+
+def make_server_pass(fl: FLConfig,
+                     fresh_loss_fn: Optional[Callable[[Any, Any], jnp.ndarray]],
+                     *, mode: Optional[str] = None,
+                     interpret: Optional[bool] = None) -> Callable:
+    """Build the jitted server pass.
+
+    Returns ``pass_fn(params, deltas_st, bases_st, probes, probe_mask,
+    data_sizes, taus, losses=None) -> (new_params, info)`` where
+    ``deltas_st`` / ``bases_st`` are pytrees with (K, ...) leaves,
+    ``probes`` is a pytree of stacked probe batches (leading K) or None,
+    and ``probe_mask`` is (K,) {0,1} marking entries that actually
+    supplied a probe (the rest fall back to loss 1.0, i.e. pure size
+    weighting). ``losses`` short-circuits the probe with precomputed
+    (K,) fresh losses — the escape hatch for probe batches whose shapes
+    don't stack (AsyncServer._gather_probes). Everything stays on
+    device; the caller decides what (if anything) to read back.
+    """
+    mode_, interpret_ = resolve_mode(fl.server_pass_mode if mode is None
+                                     else mode, interpret)
+
+    @jax.jit
+    def pass_fn(params, deltas_st, bases_st, probes, probe_mask,
+                data_sizes, taus, precomputed_losses=None):
+        spec = make_flat_spec(params, fl.server_pass_block_n)
+        x = flatten_tree(spec, params)
+        d = flatten_stacked(spec, deltas_st)
+        b = flatten_stacked(spec, bases_st)
+        data_sizes_ = data_sizes.astype(jnp.float32)
+        if precomputed_losses is not None:
+            losses = precomputed_losses.astype(jnp.float32)
+        elif probes is None or fresh_loss_fn is None:
+            losses = jnp.ones_like(data_sizes_)
+        else:
+            losses = jax.vmap(lambda pb: fresh_loss_fn(params, pb))(probes)
+            losses = losses.astype(jnp.float32)
+            if probe_mask is not None:
+                losses = jnp.where(probe_mask > 0, losses, 1.0)
+        new_x, info = apply_server_round(
+            x, b, d, losses, data_sizes_, taus, fl, mode=mode_,
+            block_n=spec.block_n, interpret=interpret_)
+        return unflatten_like(spec, new_x, params), info
+
+    return pass_fn

@@ -1,1 +1,1 @@
-from repro.kernels.weighted_agg.ops import sq_dists, weighted_sum  # noqa: F401
+from repro.kernels.weighted_agg.ops import server_update, sq_dists, weighted_sum  # noqa: F401

@@ -5,7 +5,11 @@ memory-bound streaming: for each parameter tile it must
   (a) reduce K client deltas with contribution weights (eq. 5), and
   (b) accumulate per-client squared distances ||x - base_i||^2 (eq. 3).
 
-Both kernels tile the flattened parameter axis into VMEM-resident blocks
+``fused_server_pallas`` does (a) and (b) plus the weighting policy in a
+single two-phase launch (see its docstring); the two single-purpose
+kernels below remain as the batched mode and the building blocks.
+
+All kernels tile the flattened parameter axis into VMEM-resident blocks
 (lane-aligned multiples of 128; K rides the sublane dimension), so one HBM
 pass per tile feeds the VPU — on TPU the arithmetic intensity is K flops
 per 4*K bytes loaded, i.e. firmly bandwidth-bound, and fusing the weighting
@@ -52,6 +56,126 @@ def weighted_sum_pallas(deltas: jnp.ndarray, weights: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
         interpret=interpret,
     )(deltas, weights.reshape(k, 1))
+
+
+def _fused_server_kernel(x_ref, b_ref, d_ref, p_ref, tau_ref, m_ref,
+                         upd_ref, dist_ref, w_ref, *,
+                         policy: str, eta_g: float, s_min: float,
+                         poly_a: float, normalize: str, eps: float):
+    """Whole eq. 3 + weighting + eq. 5 server reduction in ONE kernel.
+
+    Two-phase sequential grid (ph, i) with ph in {0, 1}, i over N-tiles:
+      phase 0  accumulates per-client ||x - base_k||^2 into the resident
+               (K, 1) dist block (bases stream through VMEM once);
+      boundary (ph=1, i=0) turns distances into eq.-3 staleness degrees,
+               applies the weighting policy + mean normalisation in-VMEM
+               (a K-vector — no host round-trip, no second kernel launch);
+      phase 1  streams the deltas once, reducing sum_k w_k * d[k, tile]
+               scaled by eta_g / k_eff straight into the output tiles.
+
+    Index maps park the inactive operand on block 0 during the other
+    phase, so bases and deltas are each read from HBM exactly once.
+    x:(1,bn) b:(K,bn) d:(K,bn) p/tau/m:(K,1) -> upd:(bn,) dist/w:(K,1).
+    """
+    ph = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(jnp.logical_and(ph == 0, i == 0))
+    def _init():
+        dist_ref[...] = jnp.zeros_like(dist_ref)
+        w_ref[...] = jnp.zeros_like(w_ref)
+
+    @pl.when(ph == 0)
+    def _accum_dists():
+        diff = b_ref[...] - x_ref[...]  # (K, bn), broadcast over clients
+        dist_ref[...] += jnp.sum(diff * diff, axis=1, keepdims=True)
+        # phase-0 out index is parked on tile 0; keep it defined (it is
+        # overwritten by the real reduction at (ph=1, i=0) before flush).
+        upd_ref[...] = jnp.zeros_like(upd_ref)
+
+    @pl.when(jnp.logical_and(ph == 1, i == 0))
+    def _weights():
+        # eq. 3 — staleness degree (min over ALL K slots, masking applies
+        # to the weights only: mirrors core/weighting.py exactly)
+        d = jnp.maximum(dist_ref[...], 0.0)  # (K, 1)
+        s = jnp.clip((jnp.min(d) + eps) / (d + eps), 0.0, 1.0)
+        p = p_ref[...]
+        if policy == "paper":
+            w = p / jnp.maximum(s, s_min)
+        elif policy == "multiplicative":
+            w = p * s
+        elif policy == "fedbuff":
+            w = jnp.ones_like(p)
+        else:  # polynomial / fedasync
+            w = (1.0 + tau_ref[...]) ** (-poly_a)
+        mask = m_ref[...]
+        w = w * mask
+        if normalize == "mean":
+            denom_n = jnp.maximum(jnp.sum(mask), 1.0)
+            w = w * denom_n / jnp.maximum(jnp.sum(w), 1e-12)
+        w_ref[...] = w
+
+    @pl.when(ph == 1)
+    def _reduce():
+        k_eff = jnp.maximum(jnp.sum(m_ref[...]), 1.0)
+        scale = eta_g / k_eff
+        upd_ref[...] = jnp.sum(d_ref[...] * (w_ref[...] * scale), axis=0)
+
+
+def fused_server_pallas(x: jnp.ndarray, bases: jnp.ndarray,
+                        deltas: jnp.ndarray, p_stat: jnp.ndarray,
+                        taus: jnp.ndarray, arrival_mask: jnp.ndarray,
+                        *, policy: str = "paper", eta_g: float = 1.0,
+                        s_min: float = 1e-3, poly_a: float = 0.5,
+                        normalize: str = "mean", eps: float = 1e-12,
+                        block_n: int = DEFAULT_BLOCK_N,
+                        interpret: bool = False):
+    """One-launch server pass. x:(N,), bases/deltas:(K,N) f32; the rest (K,).
+
+    Returns (upd (N,), sq_dists (K,), weights (K,)) where
+    upd = (eta_g / k_eff) * sum_k w_k * deltas[k] already carries eq. 5's
+    scale. N % block_n == 0 (use the ops wrapper for padding).
+    """
+    if policy not in ("paper", "multiplicative", "fedbuff", "polynomial",
+                      "fedasync"):
+        raise ValueError(f"unknown policy {policy!r}")
+    if normalize not in ("mean", "none"):
+        raise ValueError(f"unknown normalize {normalize!r}")
+    k, n = bases.shape
+    assert deltas.shape == (k, n) and x.shape == (n,)
+    assert n % block_n == 0, (n, block_n)
+    tiles = n // block_n
+    grid = (2, tiles)
+    col2 = lambda a: a.astype(jnp.float32).reshape(k, 1)
+    kernel = functools.partial(
+        _fused_server_kernel, policy=policy, eta_g=eta_g, s_min=s_min,
+        poly_a=poly_a, normalize=normalize, eps=eps)
+    upd, dists, w = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # park the phase-inactive operand on tile 0 (single fetch)
+            pl.BlockSpec((1, block_n), lambda ph, i: (0, i * (1 - ph))),
+            pl.BlockSpec((k, block_n), lambda ph, i: (0, i * (1 - ph))),
+            pl.BlockSpec((k, block_n), lambda ph, i: (0, i * ph)),
+            pl.BlockSpec((k, 1), lambda ph, i: (0, 0)),
+            pl.BlockSpec((k, 1), lambda ph, i: (0, 0)),
+            pl.BlockSpec((k, 1), lambda ph, i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda ph, i: (i * ph,)),
+            pl.BlockSpec((k, 1), lambda ph, i: (0, 0)),
+            pl.BlockSpec((k, 1), lambda ph, i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((k, 1), jnp.float32),
+            jax.ShapeDtypeStruct((k, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x.reshape(1, n), bases, deltas, col2(p_stat), col2(taus),
+      col2(arrival_mask))
+    return upd, dists[:, 0], w[:, 0]
 
 
 def _sq_dist_kernel(x_ref, b_ref, o_ref):

@@ -10,15 +10,19 @@ from repro.kernels.weighted_agg import kernel as _k
 from repro.kernels.weighted_agg import ref as _ref
 
 
-def _pad_to(n: int, block: int) -> int:
+def pad_to(n: int, block: int) -> int:
     return (n + block - 1) // block * block
 
 
-def _pick_block(n: int) -> int:
-    """Largest lane-aligned tile <= DEFAULT that keeps padding waste small."""
+def pick_block(n: int) -> int:
+    """Lane-aligned tile that always divides the padded length.
+
+    n >= DEFAULT_BLOCK_N: use the default tile (padding waste < one tile).
+    n <  DEFAULT_BLOCK_N: a single lane-padded tile (grid of 1).
+    """
     if n >= _k.DEFAULT_BLOCK_N:
         return _k.DEFAULT_BLOCK_N
-    return max(_k.LANE, _pad_to(n, _k.LANE) // max(1, _pad_to(n, _k.LANE) // 2048))
+    return max(_k.LANE, pad_to(n, _k.LANE))
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
@@ -29,13 +33,44 @@ def weighted_sum(deltas, weights, use_kernel: bool = True, interpret: bool = Tru
     if not use_kernel:
         return _ref.weighted_sum_ref(deltas, weights)
     k, n = deltas.shape
-    block = _pick_block(n)
-    npad = _pad_to(n, block)
+    block = pick_block(n)
+    npad = pad_to(n, block)
     if npad != n:
         deltas = jnp.pad(deltas, ((0, 0), (0, npad - n)))
     out = _k.weighted_sum_pallas(deltas, weights, block_n=block,
                                  interpret=interpret)
     return out[:n]
+
+
+def server_update(x, bases, deltas, p_stat, taus, arrival_mask=None, *,
+                  policy: str = "paper", eta_g: float = 1.0,
+                  s_min: float = 1e-3, poly_a: float = 0.5,
+                  normalize: str = "mean", block_n: int = 0,
+                  interpret: bool = False):
+    """Fused single-launch server pass (eq. 3 + weighting + eq. 5).
+
+    x: (N,), bases/deltas: (K, N), p_stat/taus: (K,). Pads N to a lane
+    multiple with zeros (distance- and sum-neutral) and slices back.
+    Returns (upd (N,), sq_dists (K,), weights (K,)); ``upd`` carries the
+    eta_g / k_eff scale of eq. 5 so ``x_new = x - upd``.
+    """
+    x = x.astype(jnp.float32)
+    bases = bases.astype(jnp.float32)
+    deltas = deltas.astype(jnp.float32)
+    k, n = bases.shape
+    if arrival_mask is None:
+        arrival_mask = jnp.ones((k,), jnp.float32)
+    block = block_n or pick_block(n)
+    npad = pad_to(n, block)
+    if npad != n:
+        x = jnp.pad(x, (0, npad - n))
+        bases = jnp.pad(bases, ((0, 0), (0, npad - n)))
+        deltas = jnp.pad(deltas, ((0, 0), (0, npad - n)))
+    upd, dists, w = _k.fused_server_pallas(
+        x, bases, deltas, p_stat, taus, arrival_mask, policy=policy,
+        eta_g=eta_g, s_min=s_min, poly_a=poly_a, normalize=normalize,
+        block_n=block, interpret=interpret)
+    return upd[:n], dists, w
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
@@ -46,8 +81,8 @@ def sq_dists(x, bases, use_kernel: bool = True, interpret: bool = True):
     if not use_kernel:
         return _ref.sq_dists_ref(x, bases)
     k, n = bases.shape
-    block = _pick_block(n)
-    npad = _pad_to(n, block)
+    block = pick_block(n)
+    npad = pad_to(n, block)
     if npad != n:
         x = jnp.pad(x, (0, npad - n))
         bases = jnp.pad(bases, ((0, 0), (0, npad - n)))

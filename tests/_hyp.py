@@ -1,0 +1,39 @@
+"""Optional-``hypothesis`` shim.
+
+Property-based tests import ``given`` / ``settings`` / ``st`` from here.
+With ``hypothesis`` installed (see requirements-dev.txt) they run as
+usual; without it they are skipped with a clear reason while every
+deterministic test in the same module keeps running — the seed tree
+failed *collection* of three whole modules on this import.
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # pragma: no cover - exercised on bare images
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+    _SKIP = pytest.mark.skip(
+        reason="hypothesis not installed (pip install -r requirements-dev.txt)")
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return _SKIP(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _StrategyStub:
+        """Accepts any strategy construction; values are never drawn."""
+
+        def __getattr__(self, _name):
+            def strategy(*_args, **_kwargs):
+                return None
+            return strategy
+
+    st = _StrategyStub()

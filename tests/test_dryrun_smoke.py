@@ -11,6 +11,7 @@ import pytest
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+@pytest.mark.slow  # end-to-end subprocess compile, minutes per arch
 @pytest.mark.parametrize("arch,shape", [("qwen3-1.7b", "decode_32k"),
                                         ("falcon-mamba-7b", "long_500k")])
 def test_dryrun_pair_compiles(tmp_path, arch, shape):

@@ -94,6 +94,7 @@ class TestAsyncServer:
         assert log["weights"][1] > log["weights"][0]
 
 
+@pytest.mark.slow  # multi-round event-driven simulator runs
 class TestSimulator:
     @pytest.fixture(scope="class")
     def fed_setup(self):
@@ -221,6 +222,50 @@ class TestCohortStep:
         expect = params["w"] - 0.1 * g["w"]  # both deltas identical
         np.testing.assert_allclose(np.asarray(s1.global_params["w"]),
                                    np.asarray(expect), rtol=1e-5)
+
+
+class TestServerCohortAgreement:
+    """The event-driven ``AsyncServer`` and the compiled replicated-client
+    ``make_cohort_step`` must implement the same round maths (the claim in
+    server.py's docstring): same batches, same probes -> same new global."""
+
+    @pytest.mark.parametrize("weighting", ["paper", "fedbuff"])
+    def test_one_round_matches(self, weighting):
+        fl = FLConfig(buffer_size=2, local_steps=1, local_lr=0.1,
+                      weighting=weighting, normalize="mean", global_lr=1.0)
+        params = {"w": jnp.array([1.0, -1.0, 0.5, 2.0])}
+        key = jax.random.PRNGKey(0)
+        local = [_quad_batch(jax.random.fold_in(key, i)) for i in range(2)]
+        probe = [_quad_batch(jax.random.fold_in(key, 10 + i)) for i in range(2)]
+        sizes = [10, 30]
+
+        # compiled cohort round (local training happens inside the step)
+        state = init_cohort_state(params, 2)
+        batch = {
+            "local": jax.tree.map(
+                lambda *xs: jnp.stack(xs).reshape(2, 1, *xs[0].shape), *local),
+            "probe": jax.tree.map(lambda *xs: jnp.stack(xs), *probe),
+            "arrival": jnp.ones(2),
+            "data_sizes": jnp.asarray(sizes, jnp.float32),
+        }
+        step = make_cohort_step(_quad_loss, fl)
+        cohort_state, _ = step(state, batch)
+
+        # event-driven server fed the very same deltas and probes
+        from repro.core.client import make_local_update_fn
+        local_update = make_local_update_fn(_quad_loss, fl.local_steps,
+                                            fl.local_lr, fl.local_momentum)
+        server = AsyncServer(params, fl, lambda p, b: _quad_loss(p, b)[0])
+        for cid in range(2):
+            batches = jax.tree.map(lambda x: x[None], local[cid])
+            delta, _ = local_update(params, batches)
+            server.receive(cid, delta, 0, sizes[cid],
+                           fresh_batch_fn=lambda c=cid: probe[c])
+
+        assert server.version == 1
+        np.testing.assert_allclose(
+            np.asarray(server.params["w"]),
+            np.asarray(cohort_state.global_params["w"]), rtol=1e-5)
 
 
 class TestDistStep:

@@ -6,8 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.data import dirichlet_partition, make_federated_image_dataset, shard_partition
