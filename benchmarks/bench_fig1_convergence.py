@@ -1,16 +1,21 @@
-"""Paper Fig. 1 — Performance Comparison.
+"""Paper Fig. 1 — Performance Comparison, under any named scenario.
 
 Reproduces the paper's experiment: image classification, 30 clients x 1500
 samples (synthetic Fashion-MNIST stand-in, see DESIGN.md §1.1), non-IID
-Dirichlet split, LeNet backbone, buffered-async server with K=10, all
-clients participating, heterogeneous client speeds (10x spread).
+Dirichlet split, LeNet backbone, buffered-async server with K=10. The
+client population (label skew, device speeds, availability, dropouts,
+network tiers) comes from ``repro.sim.scenarios`` — default
+``paper-fig1``; pass ``--scenario diurnal-phones`` etc. to stress the
+weighting policies under different system behaviors.
 
-Compared protocols (same seeds, same latency draws):
+Compared protocols (identical per-client duration streams, so identical
+client timelines — see DESIGN.md §4):
   ca-afl (paper)   : eq. 3/4/5 contribution-aware weighting  <- the paper
   fedbuff          : uniform 1/K averaging                  <- baseline [26]
   polynomial       : (1+tau)^-0.5 staleness discount        <- cited prior
   fedasync (K=1)   : fully-async polynomial mixing
   fedavg (sync)    : synchronous straggler-bound FedAvg
+  fedavg (sync,C=K): FedAvg sampling only K clients per round
 
 Outputs accuracy-vs-server-round and accuracy-vs-sim-time curves (CSV) and
 rounds/time-to-target-accuracy summaries. The paper's claim under test:
@@ -18,35 +23,34 @@ ca-afl converges faster than uniform FedBuff under staleness + non-IID.
 """
 from __future__ import annotations
 
-import dataclasses
+import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import ascii_curve, write_csv
 from repro.configs.base import FLConfig
-from repro.core import LatencyModel, run_async, run_sync
-from repro.data import make_federated_image_dataset
+from repro.core import run_async, run_sync
 from repro.models.lenet import apply_lenet, init_lenet, lenet_loss
+from repro.sim import get_scenario, registry
 
 
 def run(num_clients: int = 30, samples_per_client: int = 1500,
-        rounds: int = 40, alpha: float = 0.2, noise: float = 1.2,
-        buffer_k: int = 10, seed: int = 0, quick: bool = False):
+        rounds: int = 40, noise: float = 1.2, buffer_k: int = 10,
+        seed: int = 0, quick: bool = False, scenario: str = "paper-fig1",
+        engine: str = "vectorized"):
     if quick:
         num_clients, samples_per_client, rounds = 10, 300, 12
         buffer_k = 4
-    clients, (xt, yt) = make_federated_image_dataset(
-        num_clients=num_clients, samples_per_client=samples_per_client,
-        alpha=alpha, noise=noise, seed=seed)
+    sc = get_scenario(scenario)
+    clients, (xt, yt) = sc.make_dataset(
+        num_clients, samples_per_client=samples_per_client, seed=seed,
+        noise=noise)
     params = init_lenet(jax.random.PRNGKey(seed))
     xt, yt = xt[:1024], yt[:1024]
     ev = jax.jit(lambda p: jnp.mean(
         (jnp.argmax(apply_lenet(p, xt), -1) == yt).astype(jnp.float32)))
     eval_fn = lambda p: {"acc": float(ev(p))}
-    latency = LatencyModel.heterogeneous(num_clients, max_slowdown=10.0,
-                                         seed=seed)
 
     base = dict(num_clients=num_clients, local_steps=4, local_lr=0.05,
                 batch_size=32, global_lr=1.0)
@@ -61,17 +65,27 @@ def run(num_clients: int = 30, samples_per_client: int = 1500,
                                             weighting="polynomial", **base)),
         "fedavg(sync)": ("sync", FLConfig(buffer_size=num_clients,
                                           weighting="fedbuff", **base)),
+        "fedavg(sync,C=K)": ("sync", FLConfig(buffer_size=buffer_k,
+                                              clients_per_round=buffer_k,
+                                              weighting="fedbuff", **base)),
     }
 
     rows = []
     results = {}
     for name, (mode, fl) in protocols.items():
-        runner = run_async if mode == "async" else run_sync
-        # sync rounds scaled so total client work is comparable
-        r = rounds if mode == "async" else max(3, rounds * buffer_k // num_clients)
+        # a fresh behavior per protocol, same seed: every protocol sees
+        # the exact same per-client duration draws (fair comparison)
+        kw = dict(scenario=sc, seed=seed)
+        if mode == "async":
+            runner, r, kw["engine"] = run_async, rounds, engine
+        else:
+            runner = run_sync
+            # full-participation sync rounds scaled for comparable work;
+            # the C=K variant does K updates/round like the async runs
+            r = (rounds if fl.clients_per_round
+                 else max(3, rounds * buffer_k // num_clients))
         res = runner(lenet_loss, params, clients, fl, total_rounds=r,
-                     eval_fn=eval_fn, eval_every=max(1, rounds // 20),
-                     latency=latency, seed=seed)
+                     eval_fn=eval_fn, eval_every=max(1, rounds // 20), **kw)
         results[name] = res
         for h in res.history:
             rows.append([name, h["round"], round(h["time"], 3),
@@ -102,4 +116,12 @@ def run(num_clients: int = 30, samples_per_client: int = 1500,
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--scenario", default="paper-fig1",
+                    choices=sorted(registry()))
+    ap.add_argument("--engine", default="vectorized",
+                    choices=["vectorized", "legacy"])
+    a = ap.parse_args()
+    run(rounds=a.rounds, quick=a.quick, scenario=a.scenario, engine=a.engine)

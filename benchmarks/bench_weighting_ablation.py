@@ -2,33 +2,37 @@
 
 The paper's eq. (5) ambiguity (DESIGN.md §1.1) is resolved empirically:
 ca-afl 'paper' (divide by S) vs 'multiplicative' (multiply by S) vs the
-baselines, same seeds/latency. Also ablates the fresh-loss probe (P_i=1)
-to isolate each factor's contribution.
+baselines, under any named client-behavior scenario (default the paper's
+``paper-fig1``; pass ``--scenario dropout-bernoulli`` etc. — every
+variant sees identical per-client timelines). Also ablates the
+fresh-loss probe (P_i=1) to isolate each factor's contribution.
 """
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import write_csv
 from repro.configs.base import FLConfig
-from repro.core import LatencyModel, run_async
-from repro.data import make_federated_image_dataset
+from repro.core import run_async
 from repro.models.lenet import apply_lenet, init_lenet, lenet_loss
+from repro.sim import get_scenario, registry
 
 
-def run(rounds: int = 25, num_clients: int = 16, quick: bool = False):
+def run(rounds: int = 25, num_clients: int = 16, quick: bool = False,
+        scenario: str = "paper-fig1", engine: str = "vectorized"):
     if quick:
         rounds, num_clients = 10, 8
-    clients, (xt, yt) = make_federated_image_dataset(
-        num_clients=num_clients, samples_per_client=400, alpha=0.2, noise=1.2,
-        seed=1)
+    sc = get_scenario(scenario)
+    clients, (xt, yt) = sc.make_dataset(num_clients, samples_per_client=400,
+                                        seed=1, noise=1.2)
     params = init_lenet(jax.random.PRNGKey(1))
     xt, yt = xt[:512], yt[:512]
     ev = jax.jit(lambda p: jnp.mean(
         (jnp.argmax(apply_lenet(p, xt), -1) == yt).astype(jnp.float32)))
     eval_fn = lambda p: {"acc": float(ev(p))}
-    latency = LatencyModel.heterogeneous(num_clients, max_slowdown=8.0, seed=1)
 
     variants = []
     for policy in ("paper", "multiplicative", "fedbuff", "polynomial"):
@@ -42,8 +46,8 @@ def run(rounds: int = 25, num_clients: int = 16, quick: bool = False):
         fl = FLConfig(num_clients=num_clients, buffer_size=max(4, num_clients // 3),
                       local_steps=4, local_lr=0.05, batch_size=32, **kw)
         res = run_async(lenet_loss, params, clients, fl, total_rounds=rounds,
-                        eval_fn=eval_fn, eval_every=rounds, latency=latency,
-                        seed=1)
+                        eval_fn=eval_fn, eval_every=rounds, scenario=sc,
+                        seed=1, engine=engine)
         acc = res.history[-1]["acc"]
         rows.append([name, round(acc, 4), res.server_rounds,
                      round(res.sim_time, 2)])
@@ -55,4 +59,11 @@ def run(rounds: int = 25, num_clients: int = 16, quick: bool = False):
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--scenario", default="paper-fig1",
+                    choices=sorted(registry()))
+    ap.add_argument("--engine", default="vectorized",
+                    choices=["vectorized", "legacy"])
+    a = ap.parse_args()
+    run(quick=a.quick, scenario=a.scenario, engine=a.engine)

@@ -4,6 +4,7 @@
   ablation    weighting-policy x normalisation table (resolves eq.-5 reading)
   kernels     Pallas kernel microbenches (name,us_per_call,derived CSV)
   server      CA-AFL server-pass scalability vs FedBuff
+  sim_engine  simulator throughput: legacy event loop vs vectorized engine
   roofline    §Roofline table from the dry-run artifacts (analytic terms)
 
 ``python -m benchmarks.run`` runs everything in quick mode (CPU-friendly);
@@ -42,6 +43,10 @@ def main() -> None:
     if args.only in (None, "server"):
         from benchmarks import bench_server_pass
         jobs.append(("server_pass", lambda: bench_server_pass.run(quick=quick)))
+    if args.only in (None, "sim_engine"):
+        from benchmarks import bench_sim_engine
+        jobs.append(("sim_engine (legacy loop vs vectorized)",
+                     lambda: bench_sim_engine.run(quick=quick)))
     if args.only in (None, "roofline"):
         from benchmarks import roofline
         jobs.append(("roofline", roofline.main))

@@ -1,22 +1,32 @@
 """End-to-end reproduction of the paper's §5 experiment (Fig. 1).
 
 30 clients x 1500 samples, non-IID, LeNet backbone, buffered-async server
-(K=10), all clients participating, heterogeneous device speeds. Runs the
-paper's method and all baselines over enough server rounds to separate the
-curves, and writes the comparison CSV.
+(K=10), heterogeneous device speeds. Runs the paper's method and all
+baselines over enough server rounds to separate the curves, and writes
+the comparison CSV. The client population comes from the scenario
+registry — ``--scenario diurnal-phones`` (or any name from
+``repro.sim.registry()``) re-runs the whole comparison under that
+behavior on identical client timelines.
 
-This is the full-scale driver (several minutes on CPU); pass --quick for a
-reduced run. See benchmarks/bench_fig1_convergence.py for the harness.
+This is the full-scale driver (several minutes on CPU); pass --quick for
+a reduced run. See benchmarks/bench_fig1_convergence.py for the harness.
 
 Run:  PYTHONPATH=src:. python examples/paper_experiment.py [--quick]
+          [--scenario paper-fig1] [--engine vectorized]
 """
 import argparse
 
 from benchmarks.bench_fig1_convergence import run
+from repro.sim import registry
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--scenario", default="paper-fig1",
+                    choices=sorted(registry()))
+    ap.add_argument("--engine", default="vectorized",
+                    choices=["vectorized", "legacy"])
     args = ap.parse_args()
-    run(rounds=args.rounds, quick=args.quick)
+    run(rounds=args.rounds, quick=args.quick, scenario=args.scenario,
+        engine=args.engine)

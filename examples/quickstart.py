@@ -1,22 +1,45 @@
-"""Quickstart: contribution-aware async FL in ~40 lines.
+"""Quickstart: contribution-aware async FL in ~50 lines.
 
-Simulates 8 heterogeneous clients training LeNet on a non-IID synthetic
-image dataset; compares the paper's weighting against uniform FedBuff.
+Simulates 8 heterogeneous clients training LeNet under a named
+client-behavior scenario; compares the paper's weighting against uniform
+FedBuff on identical client timelines (per-client seeded duration
+streams — see DESIGN.md §4).
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Pick any scenario from the registry (``python examples/quickstart.py
+--list``): e.g. ``--scenario diurnal-phones`` puts the clients on a
+day/night duty cycle, ``--scenario dropout-bernoulli`` loses 15% of
+uploads, ``--scenario dirichlet-extreme`` gives each client ~1-2 label
+classes.
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--scenario NAME]
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
-from repro.core import LatencyModel, run_async
-from repro.data import make_federated_image_dataset
+from repro.core import run_async
 from repro.models.lenet import apply_lenet, init_lenet, lenet_loss
+from repro.sim import get_scenario, metrics, registry
 
-# 1. federated non-IID data (Dirichlet label skew) + heterogeneous speeds
-clients, (x_test, y_test) = make_federated_image_dataset(
-    num_clients=8, samples_per_client=300, alpha=0.25, noise=1.0, seed=0)
-latency = LatencyModel.heterogeneous(8, max_slowdown=8.0, seed=0)
+ap = argparse.ArgumentParser()
+ap.add_argument("--scenario", default="paper-fig1",
+                choices=sorted(registry()))
+ap.add_argument("--list", action="store_true",
+                help="print the scenario registry and exit")
+args = ap.parse_args()
+if args.list:
+    for name, sc in sorted(registry().items()):
+        print(f"{name:20s} {sc.description}")
+    raise SystemExit(0)
+
+# 1. a scenario bundles non-IID data (Dirichlet label skew wired to
+#    data/partition.py) with client behavior (speeds, availability,
+#    dropouts, network tiers)
+scenario = get_scenario(args.scenario)
+clients, (x_test, y_test) = scenario.make_dataset(
+    num_clients=8, samples_per_client=300, seed=0)
 
 # 2. model + evaluation
 params = init_lenet(jax.random.PRNGKey(0))
@@ -25,11 +48,15 @@ eval_jit = jax.jit(lambda p: jnp.mean(
     .astype(jnp.float32)))
 eval_fn = lambda p: {"acc": float(eval_jit(p))}
 
-# 3. run the buffered-async server with both weightings
+# 3. run the buffered-async server with both weightings; same seed =>
+#    identical per-client duration draws => a fair comparison
 for weighting in ("paper", "fedbuff"):
     fl = FLConfig(num_clients=8, buffer_size=4, local_steps=4, local_lr=0.05,
                   batch_size=32, weighting=weighting)
     res = run_async(lenet_loss, params, clients, fl, total_rounds=20,
-                    eval_fn=eval_fn, eval_every=5, latency=latency, seed=0)
+                    eval_fn=eval_fn, eval_every=5, scenario=scenario, seed=0)
     curve = " ".join(f"r{h['round']}:{h['acc']:.2f}" for h in res.history)
-    print(f"{weighting:8s} | {curve} | sim_time={res.sim_time:.1f}")
+    tele = metrics.summarize(res.round_log, 8)
+    print(f"{weighting:8s} | {curve} | sim_time={res.sim_time:.1f} "
+          f"tau_mean={tele['tau_mean']:.2f} "
+          f"gini={tele['participation_gini']:.2f}")

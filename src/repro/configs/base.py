@@ -142,6 +142,7 @@ class FLConfig:
     local_momentum: float = 0.0
     global_lr: float = 1.0  # eta_g
     batch_size: int = 32
+    clients_per_round: int = 0  # sync FedAvg participation; 0 = all N
     weighting: str = "paper"  # paper | multiplicative | fedbuff | polynomial | fedasync
     normalize: str = "mean"  # mean | none
     s_min: float = 1e-3  # floor on S_i for the paper's division (numerics)

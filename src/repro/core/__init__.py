@@ -20,7 +20,14 @@ from repro.core.server_pass import (  # noqa: F401
     resolve_mode,
     unflatten_like,
 )
-from repro.core.simulator import LatencyModel, SimResult, run_async, run_sync  # noqa: F401
+from repro.core.simulator import (  # noqa: F401
+    LatencyModel,
+    SimResult,
+    run_async,
+    run_async_legacy,
+    run_sync,
+    run_vectorized,
+)
 from repro.core.weighting import (  # noqa: F401
     POLICIES,
     contribution_weights,

@@ -15,6 +15,7 @@ simulator performs that exchange directly.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable
 
 import jax
@@ -57,8 +58,12 @@ def make_local_update_fn(loss_fn: Callable, local_steps: int, local_lr: float,
     return local_update
 
 
+@functools.lru_cache(maxsize=64)
 def make_fresh_loss_fn(loss_fn: Callable) -> Callable:
-    """(global_params, fresh_batch) -> scalar mean per-sample loss."""
+    """(global_params, fresh_batch) -> scalar mean per-sample loss.
+
+    Memoized on ``loss_fn`` so repeated server constructions share one
+    probe function (and downstream, one compiled server pass)."""
 
     def fresh_loss(global_params, fresh_batch):
         loss, _ = loss_fn(global_params, fresh_batch)

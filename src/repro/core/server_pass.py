@@ -40,6 +40,8 @@ aggregation round, tested in tests/test_server_pass.py.
 """
 from __future__ import annotations
 
+import functools
+
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -196,11 +198,13 @@ def apply_server_round(x: jnp.ndarray, bases: jnp.ndarray,
     return new_x, info
 
 
+@functools.lru_cache(maxsize=64)
 def make_server_pass(fl: FLConfig,
                      fresh_loss_fn: Optional[Callable[[Any, Any], jnp.ndarray]],
                      *, mode: Optional[str] = None,
                      interpret: Optional[bool] = None) -> Callable:
-    """Build the jitted server pass.
+    """Build the jitted server pass (memoized: one compiled program per
+    (fl, fresh_loss_fn, mode) across repeated server constructions).
 
     Returns ``pass_fn(params, deltas_st, bases_st, probes, probe_mask,
     data_sizes, taus, losses=None) -> (new_params, info)`` where

@@ -1,80 +1,29 @@
-"""Event-driven simulator of asynchronous federated training.
+"""Compatibility shim over the vectorized simulation engine (repro.sim).
 
-Models the realistic FL timeline the paper targets: heterogeneous clients
-(lognormal compute times with per-client speed factors, plus communication
-latency) continuously train and upload; the server aggregates whenever the
-K-buffer fills; finished clients immediately pull the newest global model
-and keep going, while stragglers continue on stale versions.
+The event-driven simulator that used to live here is now two modules:
 
-Supports protocols:
-  * buffered-async (FedBuff structure) with any weighting policy — this is
-    the paper's method when ``weighting="paper"``;
-  * fully-async (``buffer_size=1``) — FedAsync-style;
-  * synchronous FedAvg (``run_sync``) for wall-clock comparisons.
+* ``repro.sim.engine``  — the vectorized, device-resident engine (one XLA
+  launch per ``rounds_per_launch`` server rounds); the default for
+  ``run_async``;
+* ``repro.sim.legacy``  — the original per-event heapq loop, kept as the
+  parity reference (``engine="legacy"``) and benchmark baseline.
 
-Returns a history of (server_round, sim_time, eval metrics) so benchmarks
-can plot accuracy-vs-rounds AND accuracy-vs-time (the paper's Fig. 1).
+``LatencyModel`` / ``SimResult`` moved to ``repro.sim`` and are re-exported
+here unchanged. Scenario-driven runs (availability churn, dropouts,
+bandwidth tiers, ... — see ``repro.sim.scenarios.registry()``) pass
+``scenario=``/``behavior=``/``trace=`` through either runner.
+
+The engine/legacy modules are imported lazily inside the runners:
+``repro.sim.engine`` depends on ``repro.core.client``, so a module-level
+import here would cycle when ``repro.sim`` is imported first.
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-from typing import Any, Callable, Dict, List, Optional, Sequence
-
-import jax
-import numpy as np
+from typing import Any, Callable, Dict, Optional, Sequence
 
 from repro.configs.base import FLConfig
-from repro.core.client import make_fresh_loss_fn, make_local_update_fn
-from repro.core.server import AsyncServer, SyncServer
-
-
-@dataclasses.dataclass
-class LatencyModel:
-    """Per-client round duration = speed_factor * lognormal + comm."""
-
-    speed_factors: np.ndarray  # (N,) multiplicative slowness per client
-    base_mean: float = 1.0
-    sigma: float = 0.25
-    comm: float = 0.1
-
-    @staticmethod
-    def heterogeneous(num_clients: int, max_slowdown: float = 10.0,
-                      seed: int = 0, **kw) -> "LatencyModel":
-        rng = np.random.default_rng(seed)
-        # log-uniform speed factors in [1, max_slowdown]
-        f = np.exp(rng.uniform(0.0, np.log(max_slowdown), num_clients))
-        return LatencyModel(speed_factors=np.sort(f), **kw)
-
-    def sample(self, rng: np.random.Generator, client: int) -> float:
-        dur = self.speed_factors[client] * rng.lognormal(
-            mean=np.log(self.base_mean), sigma=self.sigma)
-        return float(dur + self.comm)
-
-
-@dataclasses.dataclass
-class SimResult:
-    history: List[Dict]  # per-eval: {round, time, **metrics}
-    server_rounds: int
-    sim_time: float
-    round_log: List[Dict]
-
-    def rounds_to_target(self, metric: str, target: float) -> Optional[int]:
-        for h in self.history:
-            if h.get(metric, -np.inf) >= target:
-                return h["round"]
-        return None
-
-    def time_to_target(self, metric: str, target: float) -> Optional[float]:
-        for h in self.history:
-            if h.get(metric, -np.inf) >= target:
-                return h["time"]
-        return None
-
-
-def _make_batches(ds, batch_size: int, steps: int):
-    xs, ys = zip(*[ds.batch(batch_size) for _ in range(steps)])
-    return np.stack(xs), np.stack(ys)
+from repro.sim.base import SimResult  # noqa: F401  (compat re-export)
+from repro.sim.scenarios import LatencyModel  # noqa: F401  (compat re-export)
 
 
 def run_async(loss_fn: Callable, init_params: Any, clients: Sequence,
@@ -82,85 +31,41 @@ def run_async(loss_fn: Callable, init_params: Any, clients: Sequence,
               eval_fn: Optional[Callable[[Any], Dict]] = None,
               eval_every: int = 5,
               latency: Optional[LatencyModel] = None,
-              seed: int = 0) -> SimResult:
+              seed: int = 0,
+              engine: str = "vectorized",
+              **kw) -> SimResult:
     """Simulate buffered-async FL for ``total_rounds`` server rounds.
 
-    loss_fn(params, (x, y)) -> (scalar, metrics). clients: ClientDataset-like
-    (needs .batch(b) and .size).
+    ``engine="vectorized"`` (default) runs each K-upload window as one
+    compiled cohort step; ``engine="legacy"`` replays the original
+    per-event loop. Both accept ``scenario=``, ``behavior=``, ``trace=``
+    and ``record_trace=`` (see repro.sim).
     """
-    n = len(clients)
-    rng = np.random.default_rng(seed)
-    latency = latency or LatencyModel.heterogeneous(n, seed=seed)
-    local_update = jax.jit(make_local_update_fn(
-        loss_fn, fl.local_steps, fl.local_lr, fl.local_momentum))
-    server = AsyncServer(init_params, fl, make_fresh_loss_fn(loss_fn))
-
-    # every client starts training at t=0 from version 0
-    base_version = {i: 0 for i in range(n)}
-    events = [(latency.sample(rng, i), i) for i in range(n)]
-    heapq.heapify(events)
-    history: List[Dict] = []
-    now = 0.0
-
-    def maybe_eval(force=False):
-        if eval_fn and (force or server.version % eval_every == 0):
-            if not history or history[-1]["round"] != server.version or force:
-                m = eval_fn(server.params)
-                history.append({"round": server.version, "time": now, **m})
-
-    maybe_eval(force=True)
-    while server.version < total_rounds:
-        now, cid = heapq.heappop(events)
-        ds = clients[cid]
-        bx, by = _make_batches(ds, fl.batch_size, fl.local_steps)
-        base = server.history.get(base_version[cid])
-        if base is None:  # fell out of the ring: resync (modelled as re-pull)
-            base = server.params
-            base_version[cid] = server.version
-        delta, _ = local_update(base, (bx, by))
-        fresh = (lambda d=ds: d.batch(fl.batch_size))
-        advanced = server.receive(cid, delta, base_version[cid], ds.size,
-                                  fresh_batch_fn=fresh)
-        # client immediately pulls the newest model and restarts (async)
-        base_version[cid] = server.version
-        heapq.heappush(events, (now + latency.sample(rng, cid), cid))
-        if advanced:
-            maybe_eval()
-    maybe_eval(force=True)
-    return SimResult(history=history, server_rounds=server.version,
-                     sim_time=now, round_log=server.round_log)
+    if engine == "vectorized":
+        from repro.sim.engine import run_vectorized as runner
+    elif engine == "legacy":
+        from repro.sim.legacy import run_async_legacy as runner
+    else:
+        raise ValueError(f"unknown engine {engine!r}; "
+                         "valid: 'vectorized', 'legacy'")
+    return runner(loss_fn, init_params, clients, fl, total_rounds,
+                  eval_fn=eval_fn, eval_every=eval_every, latency=latency,
+                  seed=seed, **kw)
 
 
-def run_sync(loss_fn: Callable, init_params: Any, clients: Sequence,
-             fl: FLConfig, total_rounds: int,
-             eval_fn: Optional[Callable[[Any], Dict]] = None,
-             eval_every: int = 5,
-             latency: Optional[LatencyModel] = None,
-             seed: int = 0) -> SimResult:
-    """Synchronous FedAvg: every round waits for all N clients (the
-    straggler cost the paper's Problem statement describes)."""
-    n = len(clients)
-    rng = np.random.default_rng(seed)
-    latency = latency or LatencyModel.heterogeneous(n, seed=seed)
-    local_update = jax.jit(make_local_update_fn(
-        loss_fn, fl.local_steps, fl.local_lr, fl.local_momentum))
-    server = SyncServer(init_params, fl)
-    history: List[Dict] = []
-    now = 0.0
-    for _ in range(total_rounds):
-        durations = [latency.sample(rng, i) for i in range(n)]
-        now += max(durations)  # wait for the slowest straggler
-        deltas = []
-        for cid in range(n):
-            bx, by = _make_batches(clients[cid], fl.batch_size, fl.local_steps)
-            d, _ = local_update(server.params, (bx, by))
-            deltas.append(d)
-        server.round(deltas, [c.size for c in clients])
-        if eval_fn and server.version % eval_every == 0:
-            history.append({"round": server.version, "time": now,
-                            **eval_fn(server.params)})
-    if eval_fn:
-        history.append({"round": server.version, "time": now,
-                        **eval_fn(server.params)})
-    return SimResult(history=history, server_rounds=server.version,
-                     sim_time=now, round_log=[])
+def run_vectorized(*args, **kw) -> SimResult:
+    """See ``repro.sim.engine.run_vectorized`` (lazy compat wrapper)."""
+    from repro.sim.engine import run_vectorized as f
+    return f(*args, **kw)
+
+
+def run_async_legacy(*args, **kw) -> SimResult:
+    """See ``repro.sim.legacy.run_async_legacy`` (lazy compat wrapper)."""
+    from repro.sim.legacy import run_async_legacy as f
+    return f(*args, **kw)
+
+
+def run_sync(*args, **kw) -> SimResult:
+    """See ``repro.sim.legacy.run_sync`` (lazy compat wrapper)."""
+    from repro.sim.legacy import run_sync as f
+    return f(*args, **kw)

@@ -1,0 +1,26 @@
+"""Vectorized scenario-simulation engine (DESIGN.md §4).
+
+``engine``    — device-resident windowed event engine (one XLA launch per
+                server round); the default behind ``repro.core.run_async``.
+``scenarios`` — registry of named, composable client-behavior models.
+``traces``    — record/replay of client timelines for exact reproducibility.
+``metrics``   — staleness / participation / weight-entropy telemetry.
+``legacy``    — the original per-event heapq loop (parity reference).
+"""
+from repro.sim import metrics  # noqa: F401
+from repro.sim.base import (  # noqa: F401
+    SimResult,
+    make_batches,
+    resolve_behavior,
+)
+from repro.sim.engine import run_vectorized  # noqa: F401
+from repro.sim.legacy import run_async_legacy, run_sync  # noqa: F401
+from repro.sim.scenarios import (  # noqa: F401
+    ClientBehavior,
+    LatencyModel,
+    Scenario,
+    get_scenario,
+    register,
+    registry,
+)
+from repro.sim.traces import EventTrace  # noqa: F401

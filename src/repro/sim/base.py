@@ -1,0 +1,75 @@
+"""Engine-independent simulation types and helpers.
+
+Kept free of ``repro.core`` imports so ``repro.core.simulator`` (the
+compatibility shim) can re-export these at module level without creating
+an import cycle: ``repro.sim.engine`` -> ``repro.core.client`` ->
+``repro.core.__init__`` -> ``repro.core.simulator`` -> (this module).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.sim.scenarios import ClientBehavior, LatencyModel, Scenario
+from repro.sim.traces import EventTrace
+
+
+@dataclasses.dataclass
+class SimResult:
+    history: List[Dict]  # per-eval: {round, time, **metrics}
+    server_rounds: int
+    sim_time: float
+    round_log: List[Dict]
+    num_events: int = 0  # uploads processed (incl. dropped)
+    trace: Optional[EventTrace] = None
+
+    def rounds_to_target(self, metric: str, target: float) -> Optional[int]:
+        for h in self.history:
+            if h.get(metric, -np.inf) >= target:
+                return h["round"]
+        return None
+
+    def time_to_target(self, metric: str, target: float) -> Optional[float]:
+        for h in self.history:
+            if h.get(metric, -np.inf) >= target:
+                return h["time"]
+        return None
+
+
+def make_batches(ds, batch_size: int, steps: int):
+    """(M, B, ...) stacked local-step batches from a ClientDataset."""
+    xs, ys = zip(*[ds.batch(batch_size) for _ in range(steps)])
+    return np.stack(xs), np.stack(ys)
+
+
+def resolve_behavior(n: int, seed: int,
+                     behavior: Optional[ClientBehavior] = None,
+                     scenario: Optional[Scenario] = None,
+                     latency: Optional[LatencyModel] = None,
+                     trace: Optional[EventTrace] = None) -> ClientBehavior:
+    """One rule for every runner: trace > behavior > scenario > latency.
+
+    A replayed trace needs its scenario's *deterministic* parts back
+    (diurnal gating etc.): an explicit ``scenario=``/``behavior=`` wins;
+    otherwise the scenario name recorded in the trace is looked up in
+    the registry. Unregistered composed scenarios must be re-passed
+    explicitly alongside the trace.
+    """
+    if trace is not None:
+        from repro.sim.scenarios import registry
+        if scenario is not None:
+            sc = scenario
+        elif behavior is not None:
+            sc = behavior.scenario
+        else:
+            sc = registry().get(trace.scenario,
+                                Scenario(name=trace.scenario or "replay"))
+        return trace.replay_behavior(sc)
+    if behavior is not None:
+        return behavior
+    if scenario is not None:
+        return scenario.behavior(n, seed)
+    latency = latency or LatencyModel.heterogeneous(n, seed=seed)
+    return ClientBehavior.from_latency(latency, n, seed)

@@ -1,0 +1,163 @@
+"""Legacy per-event simulator + synchronous FedAvg baseline.
+
+``run_async_legacy`` is the original event-driven heapq loop: one jitted
+``local_update`` dispatch and one ``AsyncServer.receive`` per client
+upload. It is kept as the semantic reference for the vectorized engine
+(tests/test_sim_engine.py checks round-log parity event-for-event) and as
+the baseline side of benchmarks/bench_sim_engine.py. New code should use
+``repro.sim.engine.run_vectorized`` (the default behind
+``repro.core.run_async``).
+
+Both runners draw client durations from ``ClientBehavior``'s per-client
+seeded streams — draw ``k`` of client ``i`` is identical no matter which
+protocol consumes it, so sync-vs-async wall-clock comparisons are fair
+(the seed simulator consumed one shared RNG in protocol-dependent order).
+
+``run_sync`` supports partial participation via ``FLConfig.
+clients_per_round`` (0 = all N): each round samples a uniform subset,
+waits for its slowest member, and averages only those updates — the
+FedAvg comparison setting the paper uses.
+"""
+from __future__ import annotations
+
+import functools
+import heapq
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core.client import make_fresh_loss_fn, make_local_update_fn
+from repro.core.server import AsyncServer, SyncServer
+from repro.sim.base import (
+    SimResult,
+    make_batches,
+    resolve_behavior,
+)
+from repro.sim.scenarios import ClientBehavior, LatencyModel, Scenario
+from repro.sim.traces import EventTrace
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_local_update(loss_fn: Callable, local_steps: int, local_lr: float,
+                         momentum: float) -> Callable:
+    """One jit wrapper per (loss_fn, hyperparams) so repeated runs reuse
+    the compiled program instead of re-tracing every call."""
+    return jax.jit(make_local_update_fn(loss_fn, local_steps, local_lr,
+                                        momentum))
+
+
+def run_async_legacy(loss_fn: Callable, init_params: Any, clients: Sequence,
+                     fl: FLConfig, total_rounds: int,
+                     eval_fn: Optional[Callable[[Any], Dict]] = None,
+                     eval_every: int = 5,
+                     latency: Optional[LatencyModel] = None,
+                     seed: int = 0,
+                     behavior: Optional[ClientBehavior] = None,
+                     scenario: Optional[Scenario] = None,
+                     trace: Optional[EventTrace] = None,
+                     record_trace: bool = False) -> SimResult:
+    """Buffered-async FL, one dispatch per client event (the reference)."""
+    n = len(clients)
+    beh = resolve_behavior(n, seed, behavior, scenario, latency, trace)
+    local_update = _jitted_local_update(loss_fn, fl.local_steps, fl.local_lr,
+                                        fl.local_momentum)
+    server = AsyncServer(init_params, fl, make_fresh_loss_fn(loss_fn))
+
+    # every client starts training at t=0 (availability-gated) from version 0
+    base_version = {i: 0 for i in range(n)}
+    events = []
+    for cid in range(n):
+        start = beh.next_start(cid, 0.0)
+        events.append((start + beh.duration(cid, start), cid))
+    heapq.heapify(events)
+    history: List[Dict] = []
+    event_log: List = []
+    now = 0.0
+    num_events = 0
+
+    def maybe_eval(force=False):
+        if eval_fn and (force or server.version % eval_every == 0):
+            if not history or history[-1]["round"] != server.version or force:
+                m = eval_fn(server.params)
+                history.append({"round": server.version, "time": now, **m})
+
+    def reschedule(cid, t):
+        start = beh.next_start(cid, t)
+        heapq.heappush(events, (start + beh.duration(cid, start), cid))
+
+    maybe_eval(force=True)
+    while server.version < total_rounds:
+        now, cid = heapq.heappop(events)
+        num_events += 1
+        upload_idx = int(beh._upload_idx[cid])
+        if beh.dropped(cid):  # upload lost: re-pull current model, retrain
+            base_version[cid] = server.version
+            reschedule(cid, now)
+            continue
+        ds = clients[cid]
+        bx, by = make_batches(ds, fl.batch_size, fl.local_steps)
+        base = server.history.get(base_version[cid])
+        if base is None:  # fell out of the ring: resync (modelled as re-pull)
+            base = server.params
+            base_version[cid] = server.version
+        event_log.append((now, cid, upload_idx, server.version))
+        delta, _ = local_update(base, (bx, by))
+        fresh = (lambda d=ds: d.batch(fl.batch_size))
+        advanced = server.receive(cid, delta, base_version[cid], ds.size,
+                                  fresh_batch_fn=fresh)
+        # client immediately pulls the newest model and restarts (async)
+        base_version[cid] = server.version
+        reschedule(cid, now)
+        if advanced:
+            maybe_eval()
+    maybe_eval(force=True)
+    trace_out = (EventTrace.from_behavior(beh, event_log)
+                 if record_trace else None)
+    return SimResult(history=history, server_rounds=server.version,
+                     sim_time=now, round_log=server.round_log,
+                     num_events=num_events, trace=trace_out)
+
+
+def run_sync(loss_fn: Callable, init_params: Any, clients: Sequence,
+             fl: FLConfig, total_rounds: int,
+             eval_fn: Optional[Callable[[Any], Dict]] = None,
+             eval_every: int = 5,
+             latency: Optional[LatencyModel] = None,
+             seed: int = 0,
+             behavior: Optional[ClientBehavior] = None,
+             scenario: Optional[Scenario] = None,
+             trace: Optional[EventTrace] = None) -> SimResult:
+    """Synchronous FedAvg: each round samples ``fl.clients_per_round``
+    clients (0 = all N) and waits for the slowest of them — the straggler
+    cost the paper's Problem statement describes."""
+    n = len(clients)
+    beh = resolve_behavior(n, seed, behavior, scenario, latency, trace)
+    m = min(fl.clients_per_round, n) if fl.clients_per_round else n
+    sel_rng = np.random.default_rng(np.random.SeedSequence((seed, 909)))
+    local_update = _jitted_local_update(loss_fn, fl.local_steps, fl.local_lr,
+                                        fl.local_momentum)
+    server = SyncServer(init_params, fl)
+    history: List[Dict] = []
+    now = 0.0
+    for _ in range(total_rounds):
+        sel = (np.sort(sel_rng.choice(n, size=m, replace=False))
+               if m < n else np.arange(n))
+        durations = [beh.duration(int(cid), now) for cid in sel]
+        now += max(durations)  # wait for the slowest selected straggler
+        deltas = []
+        for cid in sel:
+            bx, by = make_batches(clients[cid], fl.batch_size, fl.local_steps)
+            d, _ = local_update(server.params, (bx, by))
+            deltas.append(d)
+        server.round(deltas, [clients[cid].size for cid in sel])
+        if eval_fn and server.version % eval_every == 0:
+            history.append({"round": server.version, "time": now,
+                            **eval_fn(server.params)})
+    if eval_fn:
+        history.append({"round": server.version, "time": now,
+                        **eval_fn(server.params)})
+    return SimResult(history=history, server_rounds=server.version,
+                     sim_time=now, round_log=[],
+                     num_events=int(total_rounds * m))

@@ -1,0 +1,71 @@
+"""Coverage for data/partition.py: exact assignment, floors, IID limit."""
+import numpy as np
+import pytest
+
+from repro.data.partition import dirichlet_partition, shard_partition
+
+
+def _labels(n=1200, num_classes=10, seed=0):
+    return np.random.default_rng(seed).integers(0, num_classes, size=n)
+
+
+class TestDirichletPartition:
+    @pytest.mark.parametrize("alpha", [0.1, 1.0, 100.0])
+    def test_every_sample_assigned_exactly_once(self, alpha):
+        y = _labels()
+        parts = dirichlet_partition(y, num_clients=8, alpha=alpha, seed=1)
+        allidx = np.concatenate(parts)
+        assert allidx.size == y.size
+        np.testing.assert_array_equal(np.sort(allidx), np.arange(y.size))
+
+    @pytest.mark.parametrize("min_per_client", [1, 8, 40])
+    def test_min_per_client_honored(self, min_per_client):
+        y = _labels()
+        parts = dirichlet_partition(y, num_clients=10, alpha=0.1, seed=2,
+                                    min_per_client=min_per_client)
+        assert min(len(p) for p in parts) >= min_per_client
+
+    def test_alpha_to_inf_approaches_iid(self):
+        """α→∞: every client's label histogram converges to the global one
+        (the limit the IID scenarios rely on); small α stays far from it."""
+        y = _labels(n=5000)
+        global_hist = np.bincount(y, minlength=10) / y.size
+
+        def max_dev(alpha):
+            parts = dirichlet_partition(y, num_clients=5, alpha=alpha, seed=3)
+            devs = []
+            for p in parts:
+                h = np.bincount(y[p], minlength=10) / len(p)
+                devs.append(np.abs(h - global_hist).max())
+            return max(devs)
+
+        assert max_dev(1e5) < 0.02  # IID limit: histograms match
+        assert max_dev(0.05) > 0.2  # extreme skew: they do not
+
+    def test_low_alpha_concentrates_labels(self):
+        y = _labels(n=2000)
+        parts = dirichlet_partition(y, num_clients=10, alpha=0.05, seed=4)
+        # most clients see only a few classes
+        classes_seen = [np.unique(y[p]).size for p in parts]
+        assert np.median(classes_seen) <= 5
+
+    def test_deterministic_given_seed(self):
+        y = _labels()
+        a = dirichlet_partition(y, 6, alpha=0.3, seed=7)
+        b = dirichlet_partition(y, 6, alpha=0.3, seed=7)
+        for x, z in zip(a, b):
+            np.testing.assert_array_equal(x, z)
+
+
+class TestShardPartition:
+    def test_every_sample_assigned_exactly_once(self):
+        y = _labels(n=800)
+        parts = shard_partition(y, num_clients=8, shards_per_client=2, seed=0)
+        allidx = np.concatenate(parts)
+        np.testing.assert_array_equal(np.sort(allidx), np.arange(y.size))
+
+    def test_pathological_skew(self):
+        y = np.sort(_labels(n=1000))
+        parts = shard_partition(y, num_clients=10, shards_per_client=2, seed=1)
+        classes_seen = [np.unique(y[p]).size for p in parts]
+        assert max(classes_seen) <= 4  # each client holds ~2 shards of labels
