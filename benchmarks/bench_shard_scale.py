@@ -1,0 +1,193 @@
+"""Sharded round substrate: device-count sweep on forced-host-device CPU.
+
+Each device count D runs in its OWN subprocess (XLA must see
+``--xla_force_host_platform_device_count=D`` before jax imports) and
+measures two things on a (data=1, model=D) mesh from
+``launch/mesh.make_round_mesh``:
+
+* ``server_pass``: the flat-vector eq. 3+5 round (K buffered updates,
+  ~2^20-param vector) as one jitted program — us/round for the sharded
+  ``shard_map`` pass vs the single-device pass in the same process, so
+  the psum + partition overhead is visible directly.
+* ``engine``: ``run_vectorized`` end-to-end with ``mesh=``, reporting
+  events/sec and ``num_launches`` — the launch count must stay
+  O(T / rounds_per_launch) REGARDLESS of D (scale-out adds devices, not
+  dispatches; that's the substrate's contract).
+
+Forced host devices carve one CPU into D slices, so this measures the
+SPMD program structure (collective count, launch count, partition
+overhead) rather than real speedup — on a TPU pod the same program gets
+D memory systems instead of one. Numbers land in
+``BENCH_shard_scale.json`` + ``results/bench/shard_scale.csv``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+# ---------------------------------------------------------------------------
+# worker: runs under one forced device count
+# ---------------------------------------------------------------------------
+
+
+def _worker(devices: int, quick: bool) -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import time_fn
+    from repro.configs.base import FLConfig
+    from repro.core.server_pass import (
+        apply_server_round,
+        flatten_tree,
+        make_flat_spec,
+    )
+    from repro.launch.mesh import make_round_mesh
+    from repro.sim import get_scenario
+    from repro.sim.engine import run_vectorized
+
+    assert len(jax.devices()) >= devices, (len(jax.devices()), devices)
+    mesh = make_round_mesh(data=1, model=devices) if devices > 1 else None
+    fl = FLConfig(weighting="paper")
+    out = {"devices": devices, "jax_devices": len(jax.devices())}
+
+    # --- flat server pass: K buffered updates on an n-param vector -------
+    k, n = 16, (1 << 18 if quick else 1 << 20)
+    params = {"w": jnp.zeros((n,), jnp.float32)}
+    spec = make_flat_spec(params, 0, mesh=mesh)
+    key = jax.random.PRNGKey(0)
+    x = flatten_tree(spec, params)
+    bases = 0.1 * jax.random.normal(key, (k, spec.n_padded), jnp.float32)
+    deltas = 0.01 * jax.random.normal(jax.random.fold_in(key, 1),
+                                      (k, spec.n_padded), jnp.float32)
+    losses = jnp.linspace(0.5, 2.0, k)
+    sizes = jnp.linspace(10.0, 50.0, k)
+    taus = jnp.arange(k, dtype=jnp.float32)
+
+    def make_pass(mesh_, block):
+        @jax.jit
+        def f(x, bases, deltas, losses, sizes, taus):
+            new_x, info = apply_server_round(
+                x, bases, deltas, losses, sizes, taus, fl,
+                mode="reference", block_n=block, interpret=True, mesh=mesh_)
+            return new_x, info["weights"]
+        return f
+
+    args = (x, bases, deltas, losses, sizes, taus)
+    out["server_pass_us"] = time_fn(make_pass(mesh, spec.block_n), *args,
+                                    iters=7, warmup=2)
+    if mesh is not None:  # in-process single-device baseline for the delta
+        out["server_pass_single_us"] = time_fn(
+            make_pass(None, spec.block_n), *args, iters=7, warmup=2)
+
+    # --- engine end-to-end: launch count must not grow with D ------------
+    sc = get_scenario("paper-fig1")
+    clients, _ = sc.make_dataset(32, samples_per_client=64, seed=0)
+    efl = FLConfig(num_clients=32, buffer_size=8, local_steps=1,
+                   local_lr=0.05, batch_size=8)
+    rounds = 4 if quick else 8
+
+    def logreg_loss(p, batch):
+        bx, by = batch
+        bx = bx.reshape(bx.shape[0], -1)
+        logp = jax.nn.log_softmax(bx @ p["w"] + p["b"])
+        return -jnp.mean(jnp.take_along_axis(
+            logp, by[:, None].astype(jnp.int32), axis=1)), {}
+
+    ep = {"w": jax.random.normal(key, (784, 10)) * 0.05, "b": jnp.zeros(10)}
+    import time as _t
+    run_vectorized(logreg_loss, ep, clients, efl, total_rounds=rounds,
+                   scenario=sc, seed=0, mesh=mesh)  # warmup/compile
+    t0 = _t.perf_counter()
+    res = run_vectorized(logreg_loss, ep, clients, efl, total_rounds=rounds,
+                         scenario=sc, seed=0, mesh=mesh)
+    dt = _t.perf_counter() - t0
+    out["engine"] = {"rounds": res.server_rounds, "events": res.num_events,
+                     "events_per_sec": res.num_events / dt,
+                     "num_launches": res.num_launches, "seconds": dt}
+    print(json.dumps(out))
+
+
+# ---------------------------------------------------------------------------
+# parent: sweep device counts, one subprocess each
+# ---------------------------------------------------------------------------
+
+
+def run(quick: bool = False, device_counts=(1, 2, 4, 8)):
+    from benchmarks.common import write_csv
+
+    records = {}
+    for d in device_counts:
+        env = dict(os.environ)
+        env.update({
+            "JAX_PLATFORMS": "cpu",
+            "XLA_FLAGS": f"--xla_force_host_platform_device_count={d}",
+            "PYTHONPATH": os.pathsep.join(
+                [os.path.join(ROOT, "src"), ROOT,
+                 env.get("PYTHONPATH", "")]).rstrip(os.pathsep),
+        })
+        cmd = [sys.executable, os.path.abspath(__file__), "--worker",
+               "--devices", str(d)]
+        if quick:
+            cmd.append("--quick")
+        proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                              timeout=1800)
+        if proc.returncode != 0:
+            raise RuntimeError(f"worker D={d} failed:\n{proc.stderr[-2000:]}")
+        records[str(d)] = json.loads(proc.stdout.strip().splitlines()[-1])
+        r = records[str(d)]
+        print(f"  D={d}: server_pass {r['server_pass_us']:.0f}us/round, "
+              f"engine {r['engine']['events_per_sec']:.1f} events/s, "
+              f"{r['engine']['num_launches']} launches")
+
+    base = records[str(device_counts[0])]
+    launches = {d: records[str(d)]["engine"]["num_launches"]
+                for d in device_counts}
+    assert len(set(launches.values())) == 1, launches  # the contract
+    rows = [[d, round(records[str(d)]["server_pass_us"], 1),
+             round(records[str(d)]["engine"]["events_per_sec"], 1),
+             records[str(d)]["engine"]["num_launches"]]
+            for d in device_counts]
+    out = {
+        "bench": "shard_scale",
+        "backend": "cpu (forced host devices; measures program structure, "
+                   "not speedup)",
+        "device_counts": list(device_counts),
+        "k": 16, "n_params": (1 << 18) if quick else (1 << 20),
+        "records": records,
+        "launch_count_invariant": launches[device_counts[0]],
+        "server_pass_us_vs_single": {
+            str(d): records[str(d)]["server_pass_us"]
+            / base["server_pass_us"] for d in device_counts},
+    }
+    path = os.path.join(ROOT, "BENCH_shard_scale.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    write_csv("shard_scale.csv",
+              ["devices", "server_pass_us", "engine_events_per_sec",
+               "num_launches"], rows)
+    print(f"  launch count invariant across D: {launches}")
+    print(f"  wrote {path}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.worker:
+        _worker(args.devices, args.quick)
+    else:
+        run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

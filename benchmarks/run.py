@@ -5,6 +5,7 @@
   kernels     Pallas kernel microbenches (name,us_per_call,derived CSV)
   server      CA-AFL server-pass scalability vs FedBuff
   sim_engine  simulator throughput: legacy event loop vs vectorized engine
+  shard_scale sharded round substrate: device-count sweep (forced-host CPU)
   roofline    §Roofline table from the dry-run artifacts (analytic terms)
 
 ``python -m benchmarks.run`` runs everything in quick mode (CPU-friendly);
@@ -47,6 +48,10 @@ def main() -> None:
         from benchmarks import bench_sim_engine
         jobs.append(("sim_engine (legacy loop vs vectorized)",
                      lambda: bench_sim_engine.run(quick=quick)))
+    if args.only in (None, "shard_scale"):
+        from benchmarks import bench_shard_scale
+        jobs.append(("shard_scale (mesh-sharded round substrate)",
+                     lambda: bench_shard_scale.run(quick=quick)))
     if args.only in (None, "roofline"):
         from benchmarks import roofline
         jobs.append(("roofline", roofline.main))

@@ -9,9 +9,11 @@ from repro.core.cohort import (  # noqa: F401
     make_cohort_step,
     make_dist_step,
 )
+from repro.core.round_body import make_ring_round, make_round_body  # noqa: F401
 from repro.core.server import AsyncServer, SyncServer  # noqa: F401
 from repro.core.server_pass import (  # noqa: F401
     FlatSpec,
+    ShardedFlatSpec,
     apply_server_round,
     flatten_stacked,
     flatten_tree,

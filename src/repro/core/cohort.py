@@ -11,7 +11,11 @@ Two deployment mappings (DESIGN.md §2.1):
   weighted delta reduction (eq. 5) is one masked psum over ``data``.
   Stragglers (arrival_mask=0) carry their local progress into the next
   round instead of contributing — identical semantics to the event-driven
-  simulator, but fully compiled.
+  simulator, but fully compiled. The round maths itself lives in
+  ``core/round_body.py`` — the SAME implementation the vectorized engine
+  scans (DESIGN.md §5) — so engine==cohort agreement holds by
+  construction; this module only adds the slot state machine (resync of
+  arrivals, straggler carry-over, version bookkeeping).
 
 * **distributed-client** (arctic-480b, qwen1.5-110b): one client spans the
   whole mesh (FSDP x TP). The K-buffer fills across sequential step calls
@@ -31,15 +35,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
 from repro.core.client import make_local_update_fn
-from repro.core.server_pass import (
-    apply_server_round,
-    flatten_stacked,
-    flatten_tree,
-    make_flat_spec,
-    resolve_mode,
-    unflatten_like,
-)
-from repro.utils.pytree import tree_sq_dist, tree_sub
+from repro.core.round_body import make_round_body
+from repro.utils.pytree import tree_sq_dist
 
 
 # ---------------------------------------------------------------------------
@@ -71,7 +68,8 @@ def init_cohort_state(params: Any, cohort: int) -> CohortState:
     )
 
 
-def make_cohort_step(loss_fn: Callable, fl: FLConfig) -> Callable:
+def make_cohort_step(loss_fn: Callable, fl: FLConfig, *,
+                     mesh: Any = None) -> Callable:
     """Build the compiled replicated-client FL round.
 
     loss_fn(params, batch_dict) -> (scalar, metrics).
@@ -80,38 +78,23 @@ def make_cohort_step(loss_fn: Callable, fl: FLConfig) -> Callable:
       batch["probe"] : leaves (C, bp, ...)   — fresh-loss probe (eq. 4)
       batch["arrival"]: (C,) f32 {0,1}       — slots buffered this round
       batch["data_sizes"]: (C,) f32          — N_i
+
+    ``mesh`` shards the C-slot vmap over ``data`` and the flat-vector
+    server pass over ``model`` (core/round_body.py, DESIGN.md §5); with
+    no mesh the step is the single-device program it always was.
     """
-    local_update = make_local_update_fn(loss_fn, fl.local_steps, fl.local_lr,
-                                        fl.local_momentum)
-    mode, interpret = resolve_mode(fl.server_pass_mode)
+    round_body = make_round_body(loss_fn, fl, mesh=mesh)
 
     def step(state: CohortState, batch: Dict[str, Any]):
         arrival = batch["arrival"].astype(jnp.float32)
-
-        # --- local training: every in-flight slot advances M steps -------
-        deltas_cur, _ = jax.vmap(local_update)(state.client_params, batch["local"])
-        end_params = jax.vmap(tree_sub)(state.client_params, deltas_cur)
-        end_params = jax.tree.map(lambda e, c: e.astype(c.dtype), end_params,
-                                  state.client_params)
-        # cumulative upload delta measured from the pulled base (Delta_i)
-        up_delta = jax.vmap(tree_sub)(state.client_base, end_params)
-
-        # --- eq. 4: fresh-loss probe of x^t ------------------------------
-        fresh = jax.vmap(lambda pb: loss_fn(state.global_params, pb)[0],
-                         in_axes=(0,))(batch["probe"])
-
-        # --- eq. 3 + 5 via the shared device-resident server pass --------
-        spec = make_flat_spec(state.global_params, fl.server_pass_block_n)
         tau = (state.version - state.client_version).astype(jnp.float32)
-        new_x, info = apply_server_round(
-            flatten_tree(spec, state.global_params),
-            flatten_stacked(spec, state.client_base),
-            flatten_stacked(spec, up_delta),
-            fresh.astype(jnp.float32), batch["data_sizes"], tau, fl,
-            arrival_mask=arrival, mode=mode, block_n=spec.block_n,
-            interpret=interpret)
-        s, w = info["staleness"], info["weights"]
-        new_global = unflatten_like(spec, new_x, state.global_params)
+
+        # --- the paper's round: local training + eq. 3/4/5 (shared body) -
+        new_global, end_params, info = round_body(
+            state.global_params, state.client_base, batch["local"],
+            batch["probe"], batch["data_sizes"], tau,
+            client_params=state.client_params, arrival_mask=arrival)
+        fresh, s, w = info["fresh_loss"], info["staleness"], info["weights"]
 
         # --- arrivals re-sync; stragglers keep their local progress ------
         def resync(stacked_new_src, stacked_old):

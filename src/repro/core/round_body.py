@@ -1,0 +1,155 @@
+"""The paper's round body — ONE implementation for engine and cohort.
+
+Before this module the eq. 3/4/5 round existed twice: once inside
+``sim/engine.py::_make_chunk_step`` (gather stale bases from the version
+ring, vmap K local updates, probe, server round, write the ring) and once
+in ``core/cohort.py`` (the replicated-client SPMD mapping, with its own
+copy of the local-update / probe / flatten plumbing). ``make_round_body``
+is now the single source of both: the engine wraps it in the version-ring
+gather/write (``make_ring_round``), the cohort step wraps it in its
+slot-resync state machine, and agreement between the two is pinned by
+construction (tests/test_round_body.py).
+
+    bases   (K, ...) pytree   stale base snapshots the clients pulled
+    batch   (K, M, b, ...)    M local-step batches per client
+    probe   (K, bp, ...)      eq. 4 fresh-loss probe batches
+    ------------------------------------------------------------------
+    deltas = vmap(local_update)(start, batch)          K clients, 1 launch
+    losses = vmap(loss(params, probe_k))               eq. 4
+    x', info = apply_server_round(flat(params), ...)   eq. 3 + 5
+
+Two entry shapes, selected by ``client_params``:
+
+* ``client_params=None`` (the engine): every client trains from the base
+  it pulled, so the upload delta IS the local-update delta — bitwise
+  identical to the pre-refactor engine.
+* ``client_params`` given (the cohort): slots carry local progress across
+  rounds (stragglers), so training starts from ``client_params`` and the
+  upload delta is measured from the pulled base,
+  ``Delta_i = base_i - end_i``; ``end_params`` is returned for the
+  cohort's resync.
+
+Mesh scale-out (DESIGN.md §5): with ``mesh``, the K-client vmap is
+sharded over the ``data`` axis via ``shard_map`` (local training and
+probes are embarrassingly parallel over K — no collectives), and the
+flat-vector server pass is sharded over ``model`` inside
+``apply_server_round``. Both shardings degrade gracefully: no mesh, a
+size-1 axis, or a K not divisible by the data-axis size fall back to the
+single-device path, so existing callers are untouched.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import FLConfig
+from repro.core.client import make_local_update_fn
+from repro.core.server_pass import (
+    apply_server_round,
+    flatten_stacked,
+    flatten_tree,
+    make_flat_spec,
+    resolve_mode,
+    unflatten_like,
+)
+from repro.sharding.specs import DATA_AXIS, kclient_pspec, mesh_axis_size
+from repro.utils.pytree import tree_sub
+
+
+def make_round_body(loss_fn: Callable, fl: FLConfig, *,
+                    mesh: Any = None) -> Callable:
+    """Build the shared round body.
+
+    Returns ``body(params, bases, batch, probe, data_sizes, taus, *,
+    client_params=None, arrival_mask=None) -> (new_params, end_params,
+    info)`` — jit-safe, scan-safe. ``end_params`` is None on the engine
+    path (``client_params=None``).
+    """
+    local_update = make_local_update_fn(loss_fn, fl.local_steps, fl.local_lr,
+                                        fl.local_momentum)
+    mode, interpret = resolve_mode(fl.server_pass_mode)
+    data_shards = mesh_axis_size(mesh, DATA_AXIS)
+
+    def engine_phase(params, bases, batch, probe):
+        deltas, _ = jax.vmap(local_update)(bases, batch)
+        losses = jax.vmap(lambda pb: loss_fn(params, pb)[0])(probe)
+        return deltas, losses.astype(jnp.float32)
+
+    def cohort_phase(params, client_params, bases, batch, probe):
+        # in-flight slots advance M steps from their CURRENT local state
+        deltas_cur, _ = jax.vmap(local_update)(client_params, batch)
+        end_params = jax.vmap(tree_sub)(client_params, deltas_cur)
+        end_params = jax.tree.map(lambda e, c: e.astype(c.dtype), end_params,
+                                  client_params)
+        # cumulative upload delta measured from the pulled base (Delta_i)
+        up_delta = jax.vmap(tree_sub)(bases, end_params)
+        losses = jax.vmap(lambda pb: loss_fn(params, pb)[0],
+                          in_axes=(0,))(probe)
+        return up_delta, end_params, losses.astype(jnp.float32)
+
+    def sharded_over_clients(phase, params, *stacked):
+        """Run ``phase`` with its K-stacked args/results over ``data``."""
+        k = jax.tree.leaves(stacked[0])[0].shape[0]
+        if data_shards > 1 and k % data_shards:
+            warnings.warn(
+                f"K={k} clients do not divide the data axis "
+                f"({data_shards} shards): the K-client local-update vmap "
+                "runs unsharded (replicated over data). Pick K a multiple "
+                "of the data-axis size to shard it.",
+                RuntimeWarning, stacklevel=2)
+        if data_shards <= 1 or k % data_shards:
+            return phase(params, *stacked)
+        return shard_map(
+            phase, mesh,
+            in_specs=(P(),) + (kclient_pspec(),) * len(stacked),
+            out_specs=kclient_pspec(),  # every result is K-leading
+            check_rep=False)(params, *stacked)
+
+    def body(params, bases, batch, probe, data_sizes, taus, *,
+             client_params: Optional[Any] = None,
+             arrival_mask: Optional[jnp.ndarray] = None):
+        spec = make_flat_spec(params, fl.server_pass_block_n, mesh=mesh)
+        if client_params is None:
+            deltas, losses = sharded_over_clients(
+                engine_phase, params, bases, batch, probe)
+            up_delta, end_params = deltas, None
+        else:
+            up_delta, end_params, losses = sharded_over_clients(
+                cohort_phase, params, client_params, bases, batch, probe)
+        new_x, info = apply_server_round(
+            flatten_tree(spec, params),
+            flatten_stacked(spec, bases),
+            flatten_stacked(spec, up_delta),
+            losses, data_sizes, taus, fl, arrival_mask=arrival_mask,
+            mode=mode, block_n=spec.block_n, interpret=interpret, mesh=mesh)
+        return unflatten_like(spec, new_x, params), end_params, info
+
+    return body
+
+
+def make_ring_round(loss_fn: Callable, fl: FLConfig, *,
+                    mesh: Any = None) -> Callable:
+    """The engine flavour: version-ring gather -> round body -> ring write.
+
+    Returns ``ring_round(params, ring, slots, batch, probe, sizes, taus,
+    new_slot) -> (new_params, new_ring, info)``; the ring is a pytree
+    whose leaves carry a leading (R,) version axis, device-resident and
+    advanced in place (``.at[new_slot].set``) so a ``lax.scan`` over
+    rounds never leaves the device.
+    """
+    body = make_round_body(loss_fn, fl, mesh=mesh)
+
+    def ring_round(params, ring, slots, batch, probe, sizes, taus, new_slot):
+        bases = jax.tree.map(lambda r: r[slots], ring)
+        new_params, _, info = body(params, bases, batch, probe, sizes, taus)
+        new_ring = jax.tree.map(
+            lambda r, p: r.at[new_slot].set(p.astype(r.dtype)),
+            ring, new_params)
+        return new_params, new_ring, info
+
+    return ring_round

@@ -37,16 +37,28 @@ Host-sync contract: callers receive the new params and a dict of (K,)
 info arrays, all device-resident. ``AsyncServer`` reads the info back
 with ONE ``jax.device_get`` for its round log — at most 2 host syncs per
 aggregation round, tested in tests/test_server_pass.py.
+
+Mesh scale-out (DESIGN.md §5): ``make_flat_spec(..., mesh=...)`` returns a
+``ShardedFlatSpec`` whose padded length is a multiple of
+``block_n * model_shards``, and ``apply_server_round(..., mesh=...)`` runs
+the round as a ``shard_map`` over the ``model`` axis — per-shard eq. 3
+partial distances meet in ONE ``psum``, the (K,) weighting stays
+replicated, and the eq. 5 reduction (over K, not N) completes per-shard
+with no further collective.
 """
 from __future__ import annotations
 
 import functools
+import logging
+import warnings
 
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import FLConfig
 from repro.core.weighting import (
@@ -56,6 +68,9 @@ from repro.core.weighting import (
 )
 from repro.kernels.weighted_agg import kernel as _k
 from repro.kernels.weighted_agg import ops as _ops
+from repro.sharding.specs import MODEL_AXIS, mesh_axis_size
+
+logger = logging.getLogger(__name__)
 
 MODES = ("auto", "reference", "batched", "fused")
 
@@ -66,15 +81,31 @@ def resolve_mode(mode: str, interpret: Optional[bool] = None) -> Tuple[str, bool
     Mosaic kernels compile only for TPU; everywhere else ``interpret=True``
     would run them tile-by-tile in Python (validation-only), so ``auto``
     falls back to the pure-jnp reference body — still one compiled,
-    device-resident program.
+    device-resident program. An explicit ``fused``/``batched`` request off
+    TPU is honoured in interpret mode but warns, so the silent-slowdown
+    failure mode is visible.
     """
     if mode not in MODES:
         raise ValueError(f"unknown server_pass_mode {mode!r}; valid: {MODES}")
-    on_tpu = jax.default_backend() == "tpu"
+    backend = jax.default_backend()
+    on_tpu = backend == "tpu"
     if interpret is None:
         interpret = not on_tpu
     if mode == "auto":
         mode = "fused" if on_tpu else "reference"
+        if not on_tpu:
+            logger.info(
+                "server_pass_mode='auto' resolved to 'reference' on backend "
+                "%r: the fused/batched Pallas kernels are Mosaic programs "
+                "and compile only for TPU", backend)
+    elif mode in ("batched", "fused") and not on_tpu and interpret:
+        warnings.warn(
+            f"server_pass_mode={mode!r} requested on backend {backend!r}: "
+            "Mosaic/Pallas kernels compile only for TPU, so the kernel will "
+            "run in interpret mode (tile-by-tile Python, validation-only — "
+            "orders of magnitude slower). Use server_pass_mode='reference' "
+            f"or 'auto' for a compiled {backend} path.",
+            RuntimeWarning, stacklevel=2)
     return mode, interpret
 
 
@@ -95,14 +126,45 @@ class FlatSpec(NamedTuple):
     block_n: int  # tile the kernels run with
 
 
-def make_flat_spec(template: Any, block_n: int = 0) -> FlatSpec:
-    """Build the flatten layout for ``template`` (works under tracing)."""
+class ShardedFlatSpec(NamedTuple):
+    """FlatSpec plus the mesh layout of the flat vector (DESIGN.md §5).
+
+    Same leading fields as ``FlatSpec`` (the flatten/unflatten helpers
+    accept either), but ``n_padded`` is a multiple of
+    ``block_n * model_shards`` so every ``model``-axis shard holds a whole
+    number of kernel tiles. Zero padding is distance- and sum-neutral, so
+    shards holding only padding contribute 0 to the eq. 3 psum.
+    """
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    sizes: Tuple[int, ...]
+    n: int
+    n_padded: int
+    block_n: int
+    mesh: Any  # jax.sharding.Mesh carrying the ``model`` axis
+    model_shards: int  # size of the model axis (> 1)
+
+
+def make_flat_spec(template: Any, block_n: int = 0, mesh: Any = None):
+    """Build the flatten layout for ``template`` (works under tracing).
+
+    With ``mesh`` carrying a ``model`` axis of size m > 1, returns a
+    ``ShardedFlatSpec`` padded to a ``block_n * m`` multiple so the padded
+    vector partitions evenly into per-shard whole-tile slices.
+    """
     leaves, treedef = jax.tree.flatten(template)
     shapes = tuple(tuple(x.shape) for x in leaves)
     dtypes = tuple(x.dtype for x in leaves)
     sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
     n = sum(sizes)
     block = block_n or _ops.pick_block(n)
+    shards = mesh_axis_size(mesh, MODEL_AXIS) if mesh is not None else 1
+    if shards > 1:
+        return ShardedFlatSpec(treedef, shapes, dtypes, sizes, n,
+                               _ops.pad_to(n, block * shards), block,
+                               mesh, shards)
     return FlatSpec(treedef, shapes, dtypes, sizes, n,
                     _ops.pad_to(n, block), block)
 
@@ -148,20 +210,36 @@ def apply_server_round(x: jnp.ndarray, bases: jnp.ndarray,
                        fl: FLConfig, *,
                        arrival_mask: Optional[jnp.ndarray] = None,
                        mode: str = "reference", block_n: int = 0,
-                       interpret: bool = False):
+                       interpret: bool = False, mesh: Any = None):
     """eq. 3 + 4 + 5 on flat arrays. Returns (new_x, info dict of (K,)).
 
     x: (Np,), bases/deltas: (K, Np) — already padded to a ``block_n``
     multiple (zeros), e.g. by the FlatSpec adapter. losses/data_sizes/
     taus: (K,). ``arrival_mask`` zeroes absent cohort slots (weights AND
     the k_eff divisor), matching ``contribution_weights``.
+
+    With ``mesh`` carrying a ``model`` axis of size m > 1, the pass runs
+    as a ``shard_map`` over that axis (``Np`` must be a
+    ``block_n * m`` multiple — use ``make_flat_spec(..., mesh=mesh)``):
+    per-shard partial eq. 3 distances complete with one psum, the (K,)
+    weighting is computed replicated, and the eq. 5 reduction (over K)
+    finishes per-shard with no further collective.
     """
+    if mode not in ("reference", "batched", "fused"):
+        raise ValueError(f"unknown concrete mode {mode!r}")
     p = statistical_effect(losses, data_sizes)
     k = bases.shape[0]
     mask = (jnp.ones((k,), jnp.float32) if arrival_mask is None
             else arrival_mask.astype(jnp.float32))
-    block = block_n or _ops.pick_block(x.shape[0])
     taus = taus.astype(jnp.float32)
+    shards = mesh_axis_size(mesh, MODEL_AXIS) if mesh is not None else 1
+    # default tile from the PER-SHARD slice length, so the kernels'
+    # N % block_n == 0 contract holds inside the shard_map body too
+    block = block_n or _ops.pick_block(x.shape[0] // shards)
+    if shards > 1:
+        return _apply_server_round_sharded(
+            x, bases, deltas, losses, p, taus, mask, fl, mode=mode,
+            block=block, interpret=interpret, mesh=mesh)
 
     if mode == "fused":
         upd, dists, w = _ops.server_update(
@@ -171,28 +249,82 @@ def apply_server_round(x: jnp.ndarray, bases: jnp.ndarray,
         s = staleness_degree(dists)
         new_x = x - upd
     else:
-        if mode == "batched":
-            dists = _k.sq_dists_pallas(x, bases, block_n=block,
-                                       interpret=interpret)
-        elif mode == "reference":
-            diff = bases - x[None]
-            dists = jnp.sum(diff * diff, axis=1)
-        else:
-            raise ValueError(f"unknown concrete mode {mode!r}")
-        s = staleness_degree(dists)
-        w = contribution_weights(fl.weighting, p, s, taus, s_min=fl.s_min,
-                                 poly_a=fl.poly_a, normalize=fl.normalize,
-                                 arrival_mask=None if arrival_mask is None
-                                 else mask)
-        k_eff = jnp.maximum(jnp.sum(mask), 1.0)
-        w_scaled = w * (fl.global_lr / k_eff)
-        if mode == "batched":
-            upd = _k.weighted_sum_pallas(deltas, w_scaled, block_n=block,
-                                         interpret=interpret)
-        else:
-            upd = jnp.einsum("kn,k->n", deltas, w_scaled)
+        dists = _sq_dists(x, bases, use_kernel=(mode == "batched"),
+                          block=block, interpret=interpret)
+        upd, s, w = _weight_and_reduce(
+            dists, deltas, p, taus, mask, fl,
+            use_kernel=(mode == "batched"), block=block, interpret=interpret)
         new_x = x - upd
 
+    info = {"sq_dists": dists, "staleness": s, "stat_effect": p,
+            "weights": w, "fresh_loss": losses}
+    return new_x, info
+
+
+def _sq_dists(x, bases, *, use_kernel, block, interpret):
+    """eq. 3 squared distances over the (local slice of the) flat vector."""
+    if use_kernel:
+        return _k.sq_dists_pallas(x, bases, block_n=block,
+                                  interpret=interpret)
+    diff = bases - x[None]
+    return jnp.sum(diff * diff, axis=1)
+
+
+def _weight_and_reduce(dists, deltas, p, taus, mask, fl: FLConfig, *,
+                       use_kernel, block, interpret):
+    """Everything after eq. 3: staleness ratio -> policy weights -> the
+    eq. 5 weighted-delta reduction. The ONE copy both the single-device
+    pass and the per-shard shard_map body run, so sharded-vs-single
+    parity cannot drift when the weighting logic evolves.
+    """
+    s = staleness_degree(dists)
+    w = contribution_weights(fl.weighting, p, s, taus, s_min=fl.s_min,
+                             poly_a=fl.poly_a, normalize=fl.normalize,
+                             arrival_mask=mask)
+    k_eff = jnp.maximum(jnp.sum(mask), 1.0)
+    w_scaled = w * (fl.global_lr / k_eff)
+    if use_kernel:
+        upd = _k.weighted_sum_pallas(deltas, w_scaled, block_n=block,
+                                     interpret=interpret)
+    else:
+        upd = jnp.einsum("kn,k->n", deltas, w_scaled)
+    return upd, s, w
+
+
+def _apply_server_round_sharded(x, bases, deltas, losses, p, taus, mask,
+                                fl: FLConfig, *, mode, block, interpret,
+                                mesh):
+    """shard_map body of the round over the ``model`` axis (DESIGN.md §5).
+
+    Inputs are the preprocessed arrays from ``apply_server_round`` (mask
+    built, taus cast, block picked per-shard). The fused single-launch
+    kernel folds the weighting into the kernel, but the weighting needs
+    the GLOBAL eq. 3 distances — which only exist after the cross-shard
+    psum — so under sharding both kernel modes (``batched`` and
+    ``fused``) run the two-phase tiles (``sq_dists_pallas`` +
+    ``weighted_sum_pallas``) per shard; the shape of the communication
+    (one (K,) psum) is identical either way.
+    """
+    use_kernel = mode in ("batched", "fused")
+
+    def shard_body(x_s, b_s, d_s, p_, taus_, mask_):
+        # eq. 3: per-shard partial squared distances -> ONE psum, then the
+        # shared post-distance pipeline (weighting replicated, eq. 5
+        # reducing over K) completes per-shard with no further collective
+        part = _sq_dists(x_s, b_s, use_kernel=use_kernel, block=block,
+                         interpret=interpret)
+        dists = jax.lax.psum(part, MODEL_AXIS)
+        upd, s, w = _weight_and_reduce(
+            dists, d_s, p_, taus_, mask_, fl, use_kernel=use_kernel,
+            block=block, interpret=interpret)
+        return x_s - upd, dists, s, w
+
+    new_x, dists, s, w = shard_map(
+        shard_body, mesh,
+        in_specs=(P(MODEL_AXIS), P(None, MODEL_AXIS), P(None, MODEL_AXIS),
+                  P(), P(), P()),
+        out_specs=(P(MODEL_AXIS), P(), P(), P()),
+        check_rep=False)(x, bases, deltas, p, taus, mask)
     info = {"sq_dists": dists, "staleness": s, "stat_effect": p,
             "weights": w, "fresh_loss": losses}
     return new_x, info
@@ -202,7 +334,8 @@ def apply_server_round(x: jnp.ndarray, bases: jnp.ndarray,
 def make_server_pass(fl: FLConfig,
                      fresh_loss_fn: Optional[Callable[[Any, Any], jnp.ndarray]],
                      *, mode: Optional[str] = None,
-                     interpret: Optional[bool] = None) -> Callable:
+                     interpret: Optional[bool] = None,
+                     mesh: Any = None) -> Callable:
     """Build the jitted server pass (memoized: one compiled program per
     (fl, fresh_loss_fn, mode) across repeated server constructions).
 
@@ -216,6 +349,9 @@ def make_server_pass(fl: FLConfig,
     (K,) fresh losses — the escape hatch for probe batches whose shapes
     don't stack (AsyncServer._gather_probes). Everything stays on
     device; the caller decides what (if anything) to read back.
+
+    ``mesh`` shards the flat-vector round over the mesh's ``model`` axis
+    (DESIGN.md §5); with no mesh the pass is the single-device program.
     """
     mode_, interpret_ = resolve_mode(fl.server_pass_mode if mode is None
                                      else mode, interpret)
@@ -223,7 +359,7 @@ def make_server_pass(fl: FLConfig,
     @jax.jit
     def pass_fn(params, deltas_st, bases_st, probes, probe_mask,
                 data_sizes, taus, precomputed_losses=None):
-        spec = make_flat_spec(params, fl.server_pass_block_n)
+        spec = make_flat_spec(params, fl.server_pass_block_n, mesh=mesh)
         x = flatten_tree(spec, params)
         d = flatten_stacked(spec, deltas_st)
         b = flatten_stacked(spec, bases_st)
@@ -239,7 +375,7 @@ def make_server_pass(fl: FLConfig,
                 losses = jnp.where(probe_mask > 0, losses, 1.0)
         new_x, info = apply_server_round(
             x, b, d, losses, data_sizes_, taus, fl, mode=mode_,
-            block_n=spec.block_n, interpret=interpret_)
+            block_n=spec.block_n, interpret=interpret_, mesh=mesh)
         return unflatten_like(spec, new_x, params), info
 
     return pass_fn

@@ -35,12 +35,29 @@ class ClientDataset:
     def size(self) -> int:
         return int(self.x.shape[0])
 
+    def batch_indices(self, batch_size: int) -> np.ndarray:
+        """One batch worth of sample indices (replacement iff n < batch)."""
+        n = self.size
+        return self._rng.choice(n, size=batch_size, replace=n < batch_size)
+
     def batch(self, batch_size: int):
         """Sample a random mini-batch (with replacement if n < batch_size)."""
-        n = self.size
-        replace = n < batch_size
-        idx = self._rng.choice(n, size=batch_size, replace=replace)
+        idx = self.batch_indices(batch_size)
         return self.x[idx], self.y[idx]
+
+    def batches(self, batch_size: int, count: int):
+        """``count`` stacked mini-batches, (count, B, ...), in ONE gather.
+
+        Index draws are ``count`` sequential ``batch_indices`` calls, so
+        the RNG stream — and therefore every batch — is bit-identical to
+        ``count`` successive ``batch()`` calls; only the per-batch fancy
+        indexing and stacking (the host-side cost at large N) collapses
+        into a single vectorized gather + reshape.
+        """
+        idx = np.concatenate([self.batch_indices(batch_size)
+                              for _ in range(count)])
+        return (self.x[idx].reshape(count, batch_size, *self.x.shape[1:]),
+                self.y[idx].reshape(count, batch_size, *self.y.shape[1:]))
 
 
 def synthetic_image_classes(num_samples: int, num_classes: int = 10,

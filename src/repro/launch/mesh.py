@@ -24,6 +24,29 @@ def make_host_mesh(model_parallel: int = 1):
                          ("data", "model"))
 
 
+def make_round_mesh(data: int = 1, model: int = 0):
+    """(data, model) mesh for the sharded round substrate (DESIGN.md §5).
+
+    ``data`` carries the K-client cohort slots, ``model`` the padded flat
+    parameter vector. ``model=0`` spreads all remaining devices on the
+    model axis. Unlike ``make_host_mesh`` this does not require using
+    every device — scale-out sweeps (benchmarks/bench_shard_scale.py) pin
+    subsets of the forced-host-device pool.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devices = jax.devices()
+    if model == 0:
+        model = max(1, len(devices) // data)
+    need = data * model
+    if need > len(devices):
+        raise ValueError(f"mesh ({data}, {model}) needs {need} devices, "
+                         f"have {len(devices)}")
+    devs = np.asarray(devices[:need]).reshape(data, model)
+    return Mesh(devs, ("data", "model"))
+
+
 def batch_axes_for(mesh) -> tuple:
     """The data-parallel axes of a mesh (cohort/batch sharding)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -144,7 +144,9 @@ def _build_cohort_train(model, fl, shape, mesh, baxes, dp, meta) -> Program:
     }
     state_specs = cohort_state_pspecs(state_sds, mesh, client_axes=baxes)
     batch_specs = batch_pspecs(batch_sds, batch_axes=baxes)
-    step = make_cohort_step(model.loss, fl)
+    # the round substrate shards explicitly on this mesh (DESIGN.md §5):
+    # C-slot vmap over data, flat-vector server pass over model
+    step = make_cohort_step(model.loss, fl, mesh=mesh)
     metrics_specs = {"fresh_loss_mean": P(), "staleness_min": P(),
                      "weights_max": P(), "update_sq_norm": P()}
     meta.update(cohort=cohort, local_batch=b, local_steps=m)

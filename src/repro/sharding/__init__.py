@@ -3,5 +3,9 @@ from repro.sharding.specs import (  # noqa: F401
     cache_pspecs,
     cohort_state_pspecs,
     dist_state_pspecs,
+    flat_param_pspec,
+    flat_stacked_pspec,
+    kclient_pspec,
+    mesh_axis_size,
     param_pspecs,
 )

@@ -36,6 +36,39 @@ def _axis_size(mesh, name) -> int:
     return int(dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1))
 
 
+def mesh_axis_size(mesh, name) -> int:
+    """Size of mesh axis ``name`` (1 when absent or ``mesh`` is None)."""
+    if mesh is None:
+        return 1
+    return _axis_size(mesh, name)
+
+
+# ---------------------------------------------------------------------------
+# sharded round substrate (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+# The mesh-sharded round (core/round_body.py + core/server_pass.py) works on
+# two layouts: the padded flat f32 parameter vector, partitioned over the
+# ``model`` axis, and K-client stacked pytrees, partitioned over ``data``.
+
+
+def flat_param_pspec() -> P:
+    """(Np,) padded flat parameter vector: partitioned over ``model``."""
+    return P(MODEL_AXIS)
+
+
+def flat_stacked_pspec() -> P:
+    """(K, Np) stacked flat bases/deltas: K replicated, Np over ``model``."""
+    return P(None, MODEL_AXIS)
+
+
+def kclient_pspec() -> P:
+    """(K, ...) client-stacked leaves: K over ``data``, rest replicated.
+
+    Used as a pytree-prefix spec: trailing (unmentioned) dims replicate.
+    """
+    return P(DATA_AXIS)
+
+
 def _div(dim: int, size: int) -> bool:
     return size > 0 and dim % size == 0
 

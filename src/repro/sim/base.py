@@ -23,6 +23,7 @@ class SimResult:
     sim_time: float
     round_log: List[Dict]
     num_events: int = 0  # uploads processed (incl. dropped)
+    num_launches: int = 0  # XLA dispatches issued (0 = runner doesn't count)
     trace: Optional[EventTrace] = None
 
     def rounds_to_target(self, metric: str, target: float) -> Optional[int]:
@@ -38,10 +39,30 @@ class SimResult:
         return None
 
 
+def record_eval(history: List[Dict], eval_fn, version: int, now: float,
+                params, eval_every: int, force: bool = False) -> None:
+    """Append an eval row, shared by every runner (one cadence rule).
+
+    Rows dedup on (round) unless time advanced: the trailing forced eval
+    at run end must not duplicate the final row when
+    ``total_rounds % eval_every == 0``.
+    """
+    if eval_fn is None or not (force or version % eval_every == 0):
+        return
+    if history and history[-1]["round"] == version \
+            and history[-1]["time"] == now:
+        return
+    history.append({"round": version, "time": now, **eval_fn(params)})
+
+
 def make_batches(ds, batch_size: int, steps: int):
-    """(M, B, ...) stacked local-step batches from a ClientDataset."""
-    xs, ys = zip(*[ds.batch(batch_size) for _ in range(steps)])
-    return np.stack(xs), np.stack(ys)
+    """(M, B, ...) stacked local-step batches from a ClientDataset.
+
+    One vectorized gather (``ClientDataset.batches``) with the same index
+    stream as ``steps`` sequential ``.batch()`` calls, so every runner
+    (legacy loop, vectorized engine, sync FedAvg) sees identical data.
+    """
+    return ds.batches(batch_size, steps)
 
 
 def resolve_behavior(n: int, seed: int,

@@ -8,7 +8,10 @@ completely at every aggregation, so **every server round is exactly one
 window of K uploads**, and within a window no aggregation happens until
 the K-th upload. All K clients' local training therefore depends only on
 state known at the window start, and the whole round compiles to ONE
-program (``_make_chunk_step``):
+program (``_make_chunk_step``, scanning the shared
+``core/round_body.py`` implementation — the same body the compiled
+cohort step runs, optionally mesh-sharded over (data, model) per
+DESIGN.md §5):
 
     ring   (R, ...)  device-resident version ring (R = max_staleness + 1)
     bases  = ring[base_slots]                      # gather stale bases
@@ -50,18 +53,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
-from repro.core.client import make_local_update_fn
-from repro.core.server_pass import (
-    apply_server_round,
-    flatten_stacked,
-    flatten_tree,
-    make_flat_spec,
-    resolve_mode,
-    unflatten_like,
-)
+from repro.core.round_body import make_ring_round
 from repro.sim.base import (  # noqa: F401  (re-exported for callers)
     SimResult,
     make_batches,
+    record_eval,
     resolve_behavior,
 )
 from repro.sim.scenarios import ClientBehavior, LatencyModel, Scenario
@@ -69,37 +65,26 @@ from repro.sim.traces import EventTrace
 
 
 @functools.lru_cache(maxsize=64)
-def _make_chunk_step(loss_fn: Callable, fl: FLConfig) -> Callable:
+def _make_chunk_step(loss_fn: Callable, fl: FLConfig,
+                     mesh: Optional[Any] = None) -> Callable:
     """Compile S whole server rounds (K local trainings + eq. 3/4/5 each)
     into one ``lax.scan`` program; the version ring advances on-device.
-    Memoized on (loss_fn, fl) so repeated runs — benchmark sweeps,
+    The round maths is the shared ``core/round_body.py`` implementation —
+    the same body the compiled cohort step runs — wrapped in the ring
+    gather/write; ``mesh`` shards it over (data, model) (DESIGN.md §5).
+    Memoized on (loss_fn, fl, mesh) so repeated runs — benchmark sweeps,
     protocol comparisons — reuse the compiled program."""
-    local_update = make_local_update_fn(loss_fn, fl.local_steps, fl.local_lr,
-                                        fl.local_momentum)
-    mode, interpret = resolve_mode(fl.server_pass_mode)
+    ring_round = make_ring_round(loss_fn, fl, mesh=mesh)
 
     @jax.jit
     def chunk_step(params, ring, base_slots, batches, probes, sizes, taus,
                    new_slots):
-        spec = make_flat_spec(params, fl.server_pass_block_n)
-
         def round_body(carry, xs):
             params, ring = carry
             slots, batch, probe, size, tau, new_slot = xs
-            bases = jax.tree.map(lambda r: r[slots], ring)
-            deltas, _ = jax.vmap(local_update)(bases, batch)
-            losses = jax.vmap(lambda pb: loss_fn(params, pb)[0])(probe)
-            new_x, info = apply_server_round(
-                flatten_tree(spec, params),
-                flatten_stacked(spec, bases),
-                flatten_stacked(spec, deltas),
-                losses.astype(jnp.float32), size, tau, fl,
-                mode=mode, block_n=spec.block_n, interpret=interpret)
-            new_params = unflatten_like(spec, new_x, params)
-            new_ring = jax.tree.map(
-                lambda r, p: r.at[new_slot].set(p.astype(r.dtype)),
-                ring, new_params)
-            return (new_params, new_ring), info
+            params, ring, info = ring_round(params, ring, slots, batch,
+                                            probe, size, tau, new_slot)
+            return (params, ring), info
 
         (params, ring), infos = jax.lax.scan(
             round_body, (params, ring),
@@ -119,25 +104,37 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
                    scenario: Optional[Scenario] = None,
                    trace: Optional[EventTrace] = None,
                    record_trace: bool = False,
-                   rounds_per_launch: int = 8) -> SimResult:
+                   rounds_per_launch: int = 8,
+                   mesh: Optional[Any] = None) -> SimResult:
     """Simulate buffered-async FL, many server rounds per XLA launch.
 
     Same contract as the legacy ``run_async`` plus scenario/trace hooks;
     behavior precedence: ``trace`` (replay) > ``behavior`` > ``scenario``
     > ``latency`` (plain lognormal population). ``rounds_per_launch``
     bounds how far ahead of the device the host event loop runs (launch
-    chunks are additionally clipped to eval boundaries).
+    chunks are additionally clipped to eval boundaries). ``mesh`` runs
+    every round through the sharded substrate (DESIGN.md §5): the
+    K-client vmap over the ``data`` axis, the flat-vector server pass
+    over ``model``, with the params and version ring device-resident on
+    the mesh; no mesh is the single-device path, bit-for-bit unchanged.
     """
     n = len(clients)
     k = fl.buffer_size
     beh = resolve_behavior(n, seed, behavior, scenario, latency, trace)
     ring_depth = fl.max_staleness + 1
-    chunk_step = _make_chunk_step(loss_fn, fl)
+    chunk_step = _make_chunk_step(loss_fn, fl, mesh)
 
     params = init_params
     ring = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (ring_depth,) + x.shape) * 1,
         init_params)
+    if mesh is not None:
+        # params/ring live replicated on the mesh (the flat vector and the
+        # K-client axis are re-partitioned inside the round's shard_maps)
+        replicated = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())
+        params = jax.device_put(params, replicated)
+        ring = jax.device_put(ring, replicated)
     version = 0
     base_version = np.zeros(n, np.int64)
     now = 0.0
@@ -145,6 +142,7 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
     pending: List[Dict] = []  # per-round host metadata + device info handles
     event_log: List = []
     num_events = 0
+    num_launches = 0
 
     # every client starts training at t=0 (availability-gated) from version 0
     events = []
@@ -154,10 +152,8 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
     heapq.heapify(events)
 
     def maybe_eval(force=False):
-        if eval_fn and (force or version % eval_every == 0):
-            if not history or history[-1]["round"] != version or force:
-                history.append({"round": version, "time": now,
-                                **eval_fn(params)})
+        record_eval(history, eval_fn, version, now, params, eval_every,
+                    force)
 
     def reschedule(cid, t):
         start = beh.next_start(cid, t)
@@ -189,7 +185,13 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
                 base_version[cid] = version
                 reschedule(cid, t)
         now = window[-1][0]  # the K-th upload triggers the aggregation
-        train = [make_batches(clients[cid], fl.batch_size, fl.local_steps)
+        # one vectorized gather per client for the M local-step batches
+        # (ClientDataset.batches draws the same index stream as M
+        # sequential .batch() calls); probes draw AFTER all train draws —
+        # the aggregation-time order AsyncServer uses — so legacy parity
+        # holds. The per-step Python loops this replaces were the host
+        # bottleneck at large N.
+        train = [clients[cid].batches(fl.batch_size, fl.local_steps)
                  for _, cid, _, _ in window]
         probes = [clients[cid].batch(fl.batch_size)
                   for _, cid, _, _ in window]  # eq.-4 probes, FIFO order
@@ -238,6 +240,7 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
             np.asarray([w["tau"] for w in windows], np.float32),
             np.asarray([(version - s + j + 1) % ring_depth
                         for j in range(s)], np.int32))
+        num_launches += 1
         # keep only the round-log metadata; the batch arrays would
         # otherwise pin O(total_rounds * K * batch) host memory
         pending.append({"windows": [{"clients": w["clients"], "tau": w["tau"]}
@@ -267,4 +270,4 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
                  if record_trace else None)
     return SimResult(history=history, server_rounds=version, sim_time=now,
                      round_log=round_log, num_events=num_events,
-                     trace=trace_out)
+                     num_launches=num_launches, trace=trace_out)

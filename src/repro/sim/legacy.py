@@ -33,6 +33,7 @@ from repro.core.server import AsyncServer, SyncServer
 from repro.sim.base import (
     SimResult,
     make_batches,
+    record_eval,
     resolve_behavior,
 )
 from repro.sim.scenarios import ClientBehavior, LatencyModel, Scenario
@@ -78,10 +79,8 @@ def run_async_legacy(loss_fn: Callable, init_params: Any, clients: Sequence,
     num_events = 0
 
     def maybe_eval(force=False):
-        if eval_fn and (force or server.version % eval_every == 0):
-            if not history or history[-1]["round"] != server.version or force:
-                m = eval_fn(server.params)
-                history.append({"round": server.version, "time": now, **m})
+        record_eval(history, eval_fn, server.version, now, server.params,
+                    eval_every, force)
 
     def reschedule(cid, t):
         start = beh.next_start(cid, t)

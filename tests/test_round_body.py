@@ -1,0 +1,234 @@
+"""The shared round body (core/round_body.py) and the mesh-sharded round
+substrate (DESIGN.md §5): engine==cohort agreement through the single
+implementation, ShardedFlatSpec padding, and multi-device parity of the
+sharded pass against the single-device path (in-process when the session
+has >= 8 devices — the CI multi-device job — else via a subprocess with
+8 forced host devices)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core.cohort import init_cohort_state, make_cohort_step
+from repro.core.round_body import make_ring_round, make_round_body
+from repro.core.server_pass import (
+    FlatSpec,
+    ShardedFlatSpec,
+    flatten_tree,
+    make_flat_spec,
+    unflatten_like,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _quad_loss(params, batch):
+    x, y = batch
+    return jnp.mean((x @ params["w"] - y) ** 2), {}
+
+
+def _quad_batch(key, n=8, d=4):
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (n, d))
+    y = x @ jnp.arange(1.0, d + 1.0) + 0.01 * jax.random.normal(k2, (n,))
+    return x, y
+
+
+def _round_inputs(k=3, steps=2, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = {"w": jnp.array([1.0, -1.0, 0.5, 2.0])}
+    local = jax.tree.map(
+        lambda *xs: jnp.stack(xs).reshape(k, steps, -1, *xs[0].shape[1:])
+        if xs[0].ndim > 1 else jnp.stack(xs).reshape(k, steps, -1),
+        *[_quad_batch(jax.random.fold_in(key, i), n=steps * 4)
+          for i in range(k)])
+    probe = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[_quad_batch(jax.random.fold_in(key, 100 + i)) for i in range(k)])
+    sizes = jnp.linspace(10.0, 30.0, k)
+    taus = jnp.arange(k, dtype=jnp.float32)
+    return params, local, probe, sizes, taus
+
+
+FL = FLConfig(buffer_size=3, local_steps=2, local_lr=0.05, weighting="paper")
+
+
+class TestSharedRoundBody:
+    """engine path == cohort path through the ONE round implementation."""
+
+    def test_engine_and_cohort_paths_agree(self):
+        """With fresh slots (client_params == pulled base) the cohort path
+        must reproduce the engine path: identical new_params and info."""
+        params, local, probe, sizes, taus = _round_inputs()
+        body = make_round_body(_quad_loss, FL)
+        bases = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (3,) + x.shape),
+                             params)
+        new_e, end_e, info_e = body(params, bases, local, probe, sizes, taus)
+        new_c, end_c, info_c = body(params, bases, local, probe, sizes, taus,
+                                    client_params=bases,
+                                    arrival_mask=jnp.ones(3))
+        assert end_e is None and end_c is not None
+        np.testing.assert_allclose(np.asarray(new_e["w"]),
+                                   np.asarray(new_c["w"]),
+                                   rtol=1e-5, atol=1e-6)
+        assert set(info_e) == set(info_c)
+        for k_ in info_e:
+            np.testing.assert_allclose(np.asarray(info_e[k_]),
+                                       np.asarray(info_c[k_]),
+                                       rtol=1e-5, atol=1e-6, err_msg=k_)
+
+    def test_cohort_step_matches_ring_round(self):
+        """The shared-round fixture: one make_cohort_step round (all slots
+        arrive, fresh bases) == one engine ring round on the same inputs —
+        same new global params AND same info/round-log quantities."""
+        params, local, probe, sizes, taus = _round_inputs()
+        k = 3
+
+        # engine side: depth-1 ring holding x^t, everyone pulls slot 0
+        ring_round = make_ring_round(_quad_loss, FL)
+        ring = jax.tree.map(lambda x: x[None] * 1, params)
+        new_p, new_ring, info = ring_round(
+            params, ring, jnp.zeros(k, jnp.int32), local, probe, sizes,
+            jnp.zeros(k, jnp.float32), jnp.int32(0))
+
+        # cohort side: same batches through the compiled cohort state machine
+        step = make_cohort_step(_quad_loss, FL)
+        state = init_cohort_state(params, k)
+        batch = {"local": local, "probe": probe, "arrival": jnp.ones(k),
+                 "data_sizes": sizes}
+        new_state, mets = step(state, batch)
+
+        np.testing.assert_allclose(np.asarray(new_p["w"]),
+                                   np.asarray(new_state.global_params["w"]),
+                                   rtol=1e-5, atol=1e-6)
+        # the ring write holds the same new params
+        np.testing.assert_allclose(np.asarray(new_ring["w"][0]),
+                                   np.asarray(new_p["w"]), rtol=1e-6)
+        np.testing.assert_allclose(float(jnp.mean(info["fresh_loss"])),
+                                   float(mets["fresh_loss_mean"]), rtol=1e-5)
+        np.testing.assert_allclose(float(jnp.min(info["staleness"])),
+                                   float(mets["staleness_min"]), rtol=1e-5)
+        np.testing.assert_allclose(float(jnp.max(info["weights"])),
+                                   float(mets["weights_max"]), rtol=1e-5)
+
+    def test_non_dividing_k_warns_and_falls_back(self):
+        """K not divisible by the data axis degrades to the plain vmap —
+        but loudly, naming K and the shard count."""
+        params, local, probe, sizes, taus = _round_inputs()  # K = 3
+        bases = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (3,) + x.shape), params)
+        body = make_round_body(_quad_loss, FL, mesh=_FakeMesh(data=2, model=1))
+        with pytest.warns(RuntimeWarning, match="do not divide the data"):
+            got, _, _ = body(params, bases, local, probe, sizes, taus)
+        ref, _, _ = make_round_body(_quad_loss, FL)(
+            params, bases, local, probe, sizes, taus)
+        np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(ref["w"]),
+                                   rtol=1e-6)
+
+    def test_straggler_semantics_preserved(self):
+        """The refactored cohort still carries straggler progress (the
+        behaviour its old in-module round implemented)."""
+        fl = FLConfig(buffer_size=1, local_steps=1, local_lr=0.1,
+                      weighting="paper")
+        params = {"w": jnp.zeros(4)}
+        state = init_cohort_state(params, 2)
+        step = jax.jit(make_cohort_step(_quad_loss, fl))
+        key = jax.random.PRNGKey(0)
+        batch = {
+            "local": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (2, 1) + x.shape),
+                _quad_batch(key)),
+            "probe": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (2,) + x.shape),
+                _quad_batch(jax.random.fold_in(key, 9))),
+            "arrival": jnp.array([1.0, 0.0]),
+            "data_sizes": jnp.ones(2),
+        }
+        s1, _ = step(state, batch)
+        w_stale = np.asarray(jax.tree.leaves(s1.client_params)[0][1])
+        w_base = np.asarray(jax.tree.leaves(s1.client_base)[0][1])
+        assert not np.allclose(w_stale, w_base)  # progress carried
+
+
+class _FakeMesh:
+    """Duck-typed mesh (axis names/sizes only) for spec-layout tests."""
+
+    def __init__(self, data=2, model=4):
+        self.axis_names = ("data", "model")
+        self.devices = np.empty((data, model))
+
+
+class TestShardedFlatSpec:
+    def test_padding_is_per_shard_whole_tiles(self):
+        tree = {"a": jnp.arange(7.0), "b": jnp.ones((3, 5))}
+        for model in (2, 4, 8):
+            spec = make_flat_spec(tree, mesh=_FakeMesh(model=model))
+            assert isinstance(spec, ShardedFlatSpec)
+            assert spec.model_shards == model
+            assert spec.n_padded % (spec.block_n * model) == 0
+            assert spec.n == 22
+
+    def test_model_axis_of_one_falls_back_to_flat_spec(self):
+        spec = make_flat_spec({"a": jnp.arange(7.0)},
+                              mesh=_FakeMesh(data=8, model=1))
+        assert isinstance(spec, FlatSpec)
+        assert not isinstance(spec, ShardedFlatSpec)
+
+    def test_roundtrip_with_extra_padding(self):
+        tree = {"a": jnp.arange(7.0),
+                "b": {"c": jnp.ones((3, 5), jnp.bfloat16)}}
+        spec = make_flat_spec(tree, mesh=_FakeMesh(model=8))
+        vec = flatten_tree(spec, tree)
+        assert vec.shape == (spec.n_padded,)
+        back = unflatten_like(spec, vec, tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            np.testing.assert_allclose(np.asarray(a, jnp.float32),
+                                       np.asarray(b, jnp.float32))
+
+
+TOL = {"new_x": 1e-5, "sq_dists": 1e-3, "weights": 1e-5,
+       "global": 1e-5, "client_params": 1e-5, "metrics": 1e-5,
+       "history_wnorm": 1e-5}
+
+
+def _assert_report(report):
+    assert report["devices"] >= 8
+    for check, errs in report.items():
+        if not isinstance(errs, dict):
+            continue
+        for key, err in errs.items():
+            if key in TOL:
+                assert err <= TOL[key], (check, key, err)
+    assert report["engine"]["num_launches"] >= 1
+
+
+class TestMultiDeviceParity:
+    """Sharded pass == single-device pass, 8 forced host devices."""
+
+    def test_sharded_matches_single_device(self):
+        if len(jax.devices()) >= 8:
+            # already multi-device (CI multi-device job): run in-process
+            from _shard_worker import run_all
+            _assert_report(run_all())
+            return
+        env = dict(os.environ)
+        env.update({
+            "JAX_PLATFORMS": "cpu",
+            "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+            "PYTHONPATH": os.pathsep.join(
+                [os.path.join(ROOT, "src"),
+                 env.get("PYTHONPATH", "")]).rstrip(os.pathsep),
+        })
+        proc = subprocess.run(
+            [sys.executable, os.path.join(ROOT, "tests", "_shard_worker.py")],
+            capture_output=True, text=True, env=env, timeout=900)
+        assert proc.returncode == 0, proc.stderr[-4000:]
+        report = json.loads(proc.stdout.strip().splitlines()[-1])
+        _assert_report(report)

@@ -164,6 +164,23 @@ class TestFlatSpecAdapter:
         with pytest.raises(ValueError):
             resolve_mode("nope")
 
+    def test_explicit_kernel_mode_off_tpu_warns(self):
+        """Satellite: a non-TPU user asking for the Mosaic kernels gets an
+        actionable warning naming the backend, not a silent slowdown."""
+        if jax.default_backend() == "tpu":
+            pytest.skip("kernel modes are native on TPU")
+        for mode in ("fused", "batched"):
+            with pytest.warns(RuntimeWarning,
+                              match="compile only for TPU"):
+                got, interpret = resolve_mode(mode)
+            assert got == mode and interpret
+
+    def test_auto_fallback_is_silent(self):
+        import warnings as _w
+        with _w.catch_warnings():
+            _w.simplefilter("error")
+            resolve_mode("auto")
+
 
 def _quad_loss(params, batch):
     x, y = batch

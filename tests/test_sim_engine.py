@@ -100,6 +100,29 @@ class TestEngineParity:
                       total_rounds=1, engine="nope")
 
 
+class TestEvalCadence:
+    """Satellite fix: the trailing ``maybe_eval(force=True)`` must not
+    duplicate the final history row when total_rounds % eval_every == 0."""
+
+    def test_no_duplicate_final_eval(self):
+        for runner in (run_vectorized, run_async_legacy):
+            res = runner(_quad_loss, _params(), _quad_clients(), FL,
+                         total_rounds=4, eval_fn=_eval_fn, eval_every=2,
+                         seed=0)
+            assert [h["round"] for h in res.history] == [0, 2, 4]
+
+    def test_final_eval_still_forced_on_odd_horizon(self):
+        res = run_vectorized(_quad_loss, _params(), _quad_clients(), FL,
+                             total_rounds=5, eval_fn=_eval_fn, eval_every=2,
+                             seed=0)
+        assert [h["round"] for h in res.history] == [0, 2, 4, 5]
+
+    def test_num_launches_counted(self):
+        res = run_vectorized(_quad_loss, _params(), _quad_clients(), FL,
+                             total_rounds=10, seed=0, rounds_per_launch=4)
+        assert res.num_launches == 3  # ceil(10 / 4), no eval clipping
+
+
 class TestScenarioRegistry:
     def test_registry_has_at_least_six(self):
         reg = registry()
