@@ -111,6 +111,18 @@ def _worker(devices: int, quick: bool) -> None:
     out["engine"] = {"rounds": res.server_rounds, "events": res.num_events,
                      "events_per_sec": res.num_events / dt,
                      "num_launches": res.num_launches, "seconds": dt}
+
+    # flat-sharded version ring footprint (DESIGN.md §6) on the
+    # server-pass-sized model: R retained versions cost
+    # R * n_padded / model_shards floats per device, not R full replicas
+    from repro.sim.engine import init_version_ring
+    rspec, ring = init_version_ring(params, fl, mesh=mesh)
+    per_dev = (max(sh.data.nbytes for sh in ring.addressable_shards)
+               if mesh is not None else ring.nbytes)
+    out["ring_bytes"] = {
+        "per_device": per_dev,
+        "replicated_equivalent": (fl.max_staleness + 1) * rspec.n_padded * 4,
+    }
     print(json.dumps(out))
 
 
@@ -162,6 +174,9 @@ def run(quick: bool = False, device_counts=(1, 2, 4, 8)):
         "k": 16, "n_params": (1 << 18) if quick else (1 << 20),
         "records": records,
         "launch_count_invariant": launches[device_counts[0]],
+        "ring_bytes_per_device": {
+            str(d): records[str(d)]["ring_bytes"]["per_device"]
+            for d in device_counts},
         "server_pass_us_vs_single": {
             str(d): records[str(d)]["server_pass_us"]
             / base["server_pass_us"] for d in device_counts},

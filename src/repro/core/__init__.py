@@ -9,7 +9,11 @@ from repro.core.cohort import (  # noqa: F401
     make_cohort_step,
     make_dist_step,
 )
-from repro.core.round_body import make_ring_round, make_round_body  # noqa: F401
+from repro.core.round_body import (  # noqa: F401
+    make_ring_round,
+    make_round_body,
+    make_streaming_round_body,
+)
 from repro.core.server import AsyncServer, SyncServer  # noqa: F401
 from repro.core.server_pass import (  # noqa: F401
     FlatSpec,
@@ -21,6 +25,7 @@ from repro.core.server_pass import (  # noqa: F401
     make_server_pass,
     resolve_mode,
     unflatten_like,
+    unflatten_stacked,
 )
 from repro.core.simulator import (  # noqa: F401
     LatencyModel,

@@ -19,12 +19,15 @@ Two deployment mappings (DESIGN.md §2.1):
 
 * **distributed-client** (arctic-480b, qwen1.5-110b): one client spans the
   whole mesh (FSDP x TP). The K-buffer fills across sequential step calls
-  with a *running weighted accumulator*: under mean-normalisation the
-  eq.-3 min cancels (w_i / sum w_j is min-free), so only scalar buffers +
-  one params-shaped accumulator are carried — the O(1)-memory streaming
-  form of eq. (5). Staleness distances use the scalar update-norm ring
-  (cross terms dropped; exact variant = simulator; agreement tested on
-  small models).
+  with a *running weighted accumulator* — the O(1)-memory streaming form
+  of eq. (5), now implemented by ``core/round_body.py::
+  make_streaming_round_body`` so all three deployment mappings share one
+  round implementation. Per-upload weights run the SAME ``weighting.py``
+  policy code as the exact paths (``s_min`` cap included) with the eq. 3
+  reference pinned to the current model; staleness distances use the
+  scalar update-norm ring (cross terms dropped; exact variant =
+  simulator; parity tested on small models in tests/test_round_body.py).
+  This module only keeps the buffer state machine.
 """
 from __future__ import annotations
 
@@ -34,8 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
-from repro.core.client import make_local_update_fn
-from repro.core.round_body import make_round_body
+from repro.core.round_body import make_round_body, make_streaming_round_body
 from repro.utils.pytree import tree_sq_dist
 
 
@@ -109,10 +111,19 @@ def make_cohort_step(loss_fn: Callable, fl: FLConfig, *,
         new_client_version = jnp.where(arrival > 0, new_version,
                                        state.client_version).astype(jnp.int32)
 
+        # round telemetry over ARRIVED slots only: zero-weight non-arrival
+        # slots (stragglers) must not pollute the mins/means (jit-safe
+        # where-reductions; an empty round reports neutral 0.0s)
+        n_arr = jnp.sum(arrival)
+        any_arr = n_arr > 0
         metrics = {
-            "fresh_loss_mean": jnp.mean(fresh),
-            "staleness_min": jnp.min(s),
-            "weights_max": jnp.max(w),
+            "fresh_loss_mean": jnp.where(
+                any_arr, jnp.sum(fresh * arrival) / jnp.maximum(n_arr, 1.0),
+                0.0),
+            "staleness_min": jnp.where(
+                any_arr, jnp.min(jnp.where(arrival > 0, s, jnp.inf)), 0.0),
+            "weights_max": jnp.where(
+                any_arr, jnp.max(jnp.where(arrival > 0, w, -jnp.inf)), 0.0),
             "update_sq_norm": tree_sq_dist(state.global_params, new_global),
         }
         return CohortState(new_global, new_client_params, new_client_base,
@@ -129,7 +140,7 @@ def make_cohort_step(loss_fn: Callable, fl: FLConfig, *,
 class DistFLState(NamedTuple):
     global_params: Any  # x^t, FSDP x TP sharded
     accum: Any  # running sum v_i * Delta_i (params-shaped, f32)
-    vsum: jnp.ndarray  # running sum v_i (scalar f32)
+    v_buf: jnp.ndarray  # (buffer_size,) per-slot scalar weights v_i
     count: jnp.ndarray  # updates buffered so far (int32)
     version: jnp.ndarray  # t (int32)
     update_norm_ring: jnp.ndarray  # (max_staleness,) ||u_s||^2 scalars
@@ -140,7 +151,7 @@ def init_dist_state(params: Any, fl: FLConfig) -> DistFLState:
     return DistFLState(
         global_params=params,
         accum=jax.tree.map(lambda x: jnp.zeros(x.shape, acc_dtype), params),
-        vsum=jnp.zeros((), jnp.float32),
+        v_buf=jnp.zeros((fl.buffer_size,), jnp.float32),
         count=jnp.zeros((), jnp.int32),
         version=jnp.zeros((), jnp.int32),
         update_norm_ring=jnp.zeros((fl.max_staleness,), jnp.float32),
@@ -150,66 +161,54 @@ def init_dist_state(params: Any, fl: FLConfig) -> DistFLState:
 def make_dist_step(loss_fn: Callable, fl: FLConfig) -> Callable:
     """One sequential buffer contribution + conditional server apply.
 
+    A thin state machine over the shared streaming round body
+    (``core/round_body.py::make_streaming_round_body``) — ALL weighting
+    and eq. 5 arithmetic lives there; this wrapper only manages the
+    buffer fill (v-slot write, count), the ``lax.cond`` apply/hold, and
+    version bookkeeping.
+
     Batch layout (single distributed client):
       batch["local"] : leaves (M, b, ...)
       batch["probe"] : leaves (bp, ...)
       batch["tau"]   : scalar int32 — simulated staleness in rounds
       batch["data_size"]: scalar f32
+
+    Metrics: ``buffered`` is the PRE-apply fill count (so the round that
+    triggers the apply reports K, not 0) and ``applied`` is a {0,1} flag
+    for whether this step flushed the buffer.
     """
-    local_update = make_local_update_fn(loss_fn, fl.local_steps, fl.local_lr,
-                                        fl.local_momentum)
+    streaming = make_streaming_round_body(loss_fn, fl)
 
     def step(state: DistFLState, batch: Dict[str, Any]):
-        delta, _ = local_update(state.global_params, batch["local"])
-
-        # eq. 4 probe
-        fresh = loss_fn(state.global_params, batch["probe"])[0]
-        p = batch["data_size"].astype(jnp.float32) * fresh.astype(jnp.float32)
-
-        # eq. 3 distance via scalar update-norm ring (cross terms dropped)
-        tau = jnp.minimum(batch["tau"], fl.max_staleness - 1)
-        idx = jnp.arange(fl.max_staleness)
-        recent = idx < tau  # ring[0] = newest
-        d = jnp.sum(state.update_norm_ring * recent) + 1e-12
-
-        # streaming weight v_i (mean-normalised at apply; min_j cancels)
-        if fl.weighting == "paper":
-            v = p * d
-        elif fl.weighting == "multiplicative":
-            v = p / d
-        elif fl.weighting == "fedbuff":
-            v = jnp.ones((), jnp.float32)
-        else:  # polynomial / fedasync
-            v = (1.0 + tau.astype(jnp.float32)) ** (-fl.poly_a)
-
-        accum = jax.tree.map(
-            lambda a, dl: a + (v * dl.astype(jnp.float32)).astype(a.dtype),
-            state.accum, delta)
-        vsum = state.vsum + v
+        accum, v, fresh = streaming.contribute(
+            state.global_params, state.accum, state.update_norm_ring,
+            batch["local"], batch["probe"],
+            batch["data_size"].astype(jnp.float32), batch["tau"])
+        v_buf = state.v_buf.at[state.count].set(v)
         count = state.count + 1
 
         def apply_fn(st):
-            accum_, vsum_, _ = st
-            upd = jax.tree.map(lambda a: (fl.global_lr / jnp.maximum(vsum_, 1e-12)) * a,
-                               accum_)
-            new_params = jax.tree.map(lambda x, u: (x - u.astype(x.dtype)),
-                                      state.global_params, upd)
-            unorm = jnp.sum(jnp.stack([jnp.sum(jnp.square(u)) for u in
-                                       jax.tree.leaves(upd)]))
-            ring = jnp.concatenate([unorm[None], state.update_norm_ring[:-1]])
-            zero_accum = jax.tree.map(jnp.zeros_like, accum_)
-            return (new_params, zero_accum, jnp.zeros((), jnp.float32),
-                    jnp.zeros((), jnp.int32), state.version + 1, ring)
+            accum_, v_buf_, count_ = st
+            new_params, ring = streaming.apply(
+                state.global_params, accum_, v_buf_, count_,
+                state.update_norm_ring)
+            return (new_params, jax.tree.map(jnp.zeros_like, accum_),
+                    jnp.zeros_like(v_buf_), jnp.zeros((), jnp.int32),
+                    state.version + 1, ring)
 
         def hold_fn(st):
-            accum_, vsum_, count_ = st
-            return (state.global_params, accum_, vsum_, count_, state.version,
-                    state.update_norm_ring)
+            accum_, v_buf_, count_ = st
+            return (state.global_params, accum_, v_buf_, count_,
+                    state.version, state.update_norm_ring)
 
-        new_params, accum, vsum, count, version, ring = jax.lax.cond(
-            count >= fl.buffer_size, apply_fn, hold_fn, (accum, vsum, count))
+        applied = count >= fl.buffer_size
+        new_params, accum, v_buf, count, version, ring = jax.lax.cond(
+            applied, apply_fn, hold_fn, (accum, v_buf, count))
 
-        metrics = {"fresh_loss": fresh, "v_weight": v, "buffered": count}
-        return DistFLState(new_params, accum, vsum, count, version, ring), metrics
+        metrics = {"fresh_loss": fresh, "v_weight": v,
+                   "buffered": state.count + 1,
+                   "applied": applied.astype(jnp.int32)}
+        return DistFLState(new_params, accum, v_buf, count, version,
+                           ring), metrics
 
     return step

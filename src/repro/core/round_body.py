@@ -18,16 +18,25 @@ construction (tests/test_round_body.py).
     losses = vmap(loss(params, probe_k))               eq. 4
     x', info = apply_server_round(flat(params), ...)   eq. 3 + 5
 
-Two entry shapes, selected by ``client_params``:
+Three entry shapes — one per deployment mapping (DESIGN.md §2.1/§6):
 
 * ``client_params=None`` (the engine): every client trains from the base
   it pulled, so the upload delta IS the local-update delta — bitwise
-  identical to the pre-refactor engine.
+  identical to the pre-refactor engine. ``flat_bases``/``return_flat``
+  let the engine's flat-sharded version ring feed bases in and take the
+  new params out as (n_padded,) flat vectors.
 * ``client_params`` given (the cohort): slots carry local progress across
   rounds (stragglers), so training starts from ``client_params`` and the
   upload delta is measured from the pulled base,
   ``Delta_i = base_i - end_i``; ``end_params`` is returned for the
   cohort's resync.
+* ``make_streaming_round_body`` (the distributed client): one client
+  spans the mesh, the K-buffer fills across sequential calls, and only
+  O(1) state is carried — a params-shaped running accumulator, (K,)
+  scalar weight buffers, and the update-norm ring for eq. 3 distances.
+  The per-upload weight runs the SAME ``weighting.py`` policy code as
+  the exact paths (``s_min`` cap included), with the eq. 3 reference
+  pinned to the current model.
 
 Mesh scale-out (DESIGN.md §5): with ``mesh``, the K-client vmap is
 sharded over the ``data`` axis via ``shard_map`` (local training and
@@ -47,6 +56,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from typing import NamedTuple
+
 from repro.configs.base import FLConfig
 from repro.core.client import make_local_update_fn
 from repro.core.server_pass import (
@@ -56,6 +67,12 @@ from repro.core.server_pass import (
     make_flat_spec,
     resolve_mode,
     unflatten_like,
+    unflatten_stacked,
+)
+from repro.core.weighting import (
+    contribution_weights,
+    staleness_degree,
+    statistical_effect,
 )
 from repro.sharding.specs import DATA_AXIS, kclient_pspec, mesh_axis_size
 from repro.utils.pytree import tree_sub
@@ -112,22 +129,45 @@ def make_round_body(loss_fn: Callable, fl: FLConfig, *,
 
     def body(params, bases, batch, probe, data_sizes, taus, *,
              client_params: Optional[Any] = None,
-             arrival_mask: Optional[jnp.ndarray] = None):
+             arrival_mask: Optional[jnp.ndarray] = None,
+             flat_bases: bool = False, return_flat: bool = False):
+        """``flat_bases=True`` takes ``bases`` as the (K, n_padded) flat
+        rows the sharded version ring stores (DESIGN.md §6) instead of a
+        stacked pytree; ``return_flat=True`` replaces the ``end_params``
+        return slot with the (n_padded,) flat new-params vector so the
+        engine's ring write never leaves flat space (engine path only —
+        ``client_params`` must be None)."""
         spec = make_flat_spec(params, fl.server_pass_block_n, mesh=mesh)
+        if flat_bases:
+            bases_flat = bases
+            bases = unflatten_stacked(spec, bases_flat, params)
+        else:
+            bases_flat = flatten_stacked(spec, bases)
         if client_params is None:
             deltas, losses = sharded_over_clients(
                 engine_phase, params, bases, batch, probe)
             up_delta, end_params = deltas, None
         else:
+            assert not return_flat, "return_flat is engine-path only"
             up_delta, end_params, losses = sharded_over_clients(
                 cohort_phase, params, client_params, bases, batch, probe)
         new_x, info = apply_server_round(
             flatten_tree(spec, params),
-            flatten_stacked(spec, bases),
+            bases_flat,
             flatten_stacked(spec, up_delta),
             losses, data_sizes, taus, fl, arrival_mask=arrival_mask,
             mode=mode, block_n=spec.block_n, interpret=interpret, mesh=mesh)
-        return unflatten_like(spec, new_x, params), end_params, info
+        new_params = unflatten_like(spec, new_x, params)
+        if not return_flat:
+            return new_params, end_params, info
+        # the flat vector the ring stores must hold the values clients
+        # actually receive: for all-f32 templates new_x already does
+        # (skip the round-trip); lower-precision params re-flatten the
+        # dtype-cast tree so a fresh (tau=0) client's eq. 3 distance
+        # stays exactly 0
+        if all(jnp.dtype(dt) == jnp.float32 for dt in spec.dtypes):
+            return new_params, new_x, info
+        return new_params, flatten_tree(spec, new_params), info
 
     return body
 
@@ -137,19 +177,135 @@ def make_ring_round(loss_fn: Callable, fl: FLConfig, *,
     """The engine flavour: version-ring gather -> round body -> ring write.
 
     Returns ``ring_round(params, ring, slots, batch, probe, sizes, taus,
-    new_slot) -> (new_params, new_ring, info)``; the ring is a pytree
-    whose leaves carry a leading (R,) version axis, device-resident and
-    advanced in place (``.at[new_slot].set``) so a ``lax.scan`` over
-    rounds never leaves the device.
+    new_slot) -> (new_params, new_ring, info)``. The ring is the
+    (R, n_padded) f32 matrix of flat parameter vectors on the
+    ``ShardedFlatSpec`` layout (DESIGN.md §6): row r is version r's padded
+    flat vector, so with a mesh the ring shards as ``P(None, "model")``
+    and R versions cost ``R * n_padded / model_shards`` floats per device
+    instead of R full replicas. Base gather (``ring[slots]``) and the new
+    slot write (``.at[new_slot].set(new_x)``) both happen in flat space —
+    the round body hands back the flat new-params vector, so the write
+    skips the unflatten/flatten round-trip the pytree ring needed — and
+    the ring advances in place so a ``lax.scan`` over rounds never leaves
+    the device.
     """
     body = make_round_body(loss_fn, fl, mesh=mesh)
 
     def ring_round(params, ring, slots, batch, probe, sizes, taus, new_slot):
-        bases = jax.tree.map(lambda r: r[slots], ring)
-        new_params, _, info = body(params, bases, batch, probe, sizes, taus)
-        new_ring = jax.tree.map(
-            lambda r, p: r.at[new_slot].set(p.astype(r.dtype)),
-            ring, new_params)
+        bases = ring[slots]  # (K, n_padded) flat rows
+        new_params, new_x, info = body(params, bases, batch, probe, sizes,
+                                       taus, flat_bases=True,
+                                       return_flat=True)
+        new_ring = ring.at[new_slot].set(new_x)
         return new_params, new_ring, info
 
     return ring_round
+
+
+# ---------------------------------------------------------------------------
+# streaming entry shape (distributed-client mapping, DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+
+class StreamingRoundBody(NamedTuple):
+    """The O(1)-memory running-accumulator form of the round (third entry
+    shape). ``contribute`` folds one buffered upload into the running
+    state; ``apply`` completes eq. 5 once the buffer is full. The caller
+    (``core/cohort.py::make_dist_step``) owns only the state machine —
+    ALL weighting arithmetic lives here and in ``core/weighting.py``.
+    """
+
+    contribute: Callable
+    apply: Callable
+
+
+def make_streaming_round_body(loss_fn: Callable,
+                              fl: FLConfig) -> StreamingRoundBody:
+    """Build the streaming (distributed-client) form of the round.
+
+    One client spans the whole mesh (FSDP x TP), so the K-buffer fills
+    across sequential calls and only O(1) state is carried: a
+    params-shaped accumulator ``sum_i v_i * Delta_i``, the (K,) scalar
+    weight buffer ``v_i``, and the (max_staleness,) update-norm ring that
+    estimates eq. 3 squared distances (cross terms dropped; ring[0] is
+    the newest update).
+
+    The per-upload weight ``v_i`` is the SAME ``weighting.py`` policy the
+    exact paths run — ``contribution_weights(..., normalize="none")`` on
+    the (1,)-slot vectors, including the ``s_min`` cap — with one
+    convention: the eq. 3 reference distance is pinned to 0.0 (the
+    current model, ``staleness_degree(..., ref_sq_dist=0.0)``) because
+    the buffer-wide ``min_j`` is unknown until the buffer is full, after
+    the earlier deltas have already been folded away. Whenever the buffer
+    holds a fresh (tau=0) update the pinned reference equals the true
+    min and the streaming weights match the exact path EXACTLY, cap
+    included; with every update stale, staleness is measured against the
+    current model instead of the freshest buffered update, which engages
+    the ``s_min`` cap earlier. Under ``normalize="mean"`` (the default)
+    only weight RATIOS matter, so that shift is conservative — the
+    relative up-weighting of staler updates can only saturate at the
+    cap. Under ``normalize="none"`` the absolute magnitude matters too
+    and an all-stale buffer diverges from the exact reference: ``paper``
+    saturates every weight at P/s_min (step inflated by up to 1/s_min),
+    ``multiplicative`` shrinks weights toward eps*P/d (step nearly
+    vanishes) — prefer mean normalization for this mapping. See
+    DESIGN.md §6 for the full coverage statement. ``apply`` finishes
+    with ``contribution_weights``'s normalization semantics: ``mean``
+    divides by ``sum v_i`` (the K/K factors cancel), ``none`` by
+    ``k_eff`` alone.
+
+    ``contribute(params, accum, update_norm_ring, batch, probe,
+    data_size, tau) -> (new_accum, v, fresh)`` and
+    ``apply(params, accum, v_buf, count, update_norm_ring) ->
+    (new_params, new_ring)``.
+    """
+    if fl.normalize not in ("mean", "none"):  # match contribution_weights
+        raise ValueError(f"unknown normalize {fl.normalize!r}")
+    local_update = make_local_update_fn(loss_fn, fl.local_steps, fl.local_lr,
+                                        fl.local_momentum)
+
+    def contribute(params, accum, update_norm_ring, batch, probe, data_size,
+                   tau):
+        delta, _ = local_update(params, batch)
+
+        # eq. 4 probe of the CURRENT model
+        fresh = loss_fn(params, probe)[0].astype(jnp.float32)
+        p = statistical_effect(fresh[None], data_size[None])
+
+        # eq. 3 distance via the scalar update-norm ring (cross terms
+        # dropped): ||x^t - x^{t-tau}||^2 ~= sum of the last tau ||u||^2
+        tau = jnp.minimum(tau, fl.max_staleness - 1)
+        recent = jnp.arange(fl.max_staleness) < tau  # ring[0] = newest
+        d = jnp.sum(update_norm_ring * recent)
+
+        # the exact policy code on this one slot (cap, poly, ...) with the
+        # reference pinned to the current model; normalization is deferred
+        # to apply, where the full v-buffer exists
+        s = staleness_degree(d[None], ref_sq_dist=0.0)
+        v = contribution_weights(fl.weighting, p, s,
+                                 tau[None].astype(jnp.float32),
+                                 s_min=fl.s_min, poly_a=fl.poly_a,
+                                 normalize="none")[0]
+        new_accum = jax.tree.map(
+            lambda a, dl: a + (v * dl.astype(jnp.float32)).astype(a.dtype),
+            accum, delta)
+        return new_accum, v, fresh
+
+    def apply(params, accum, v_buf, count, update_norm_ring):
+        # eq. 5 on the running accumulator: x - eta_g/k_eff * sum w_i D_i
+        # with w_i = v_i * k_eff / sum v_j ("mean") or w_i = v_i ("none")
+        # — identical semantics to contribution_weights + apply_server_round
+        k_eff = jnp.maximum(count.astype(jnp.float32), 1.0)
+        if fl.normalize == "mean":
+            scale = fl.global_lr / jnp.maximum(jnp.sum(v_buf), 1e-12)
+        else:
+            scale = fl.global_lr / k_eff
+        upd = jax.tree.map(lambda a: scale * a.astype(jnp.float32), accum)
+        new_params = jax.tree.map(lambda x, u: (x - u.astype(x.dtype)),
+                                  params, upd)
+        unorm = jnp.sum(jnp.stack([jnp.sum(jnp.square(u))
+                                   for u in jax.tree.leaves(upd)]))
+        new_ring = jnp.concatenate([unorm[None], update_norm_ring[:-1]])
+        return new_params, new_ring
+
+    return StreamingRoundBody(contribute=contribute, apply=apply)

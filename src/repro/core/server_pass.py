@@ -189,6 +189,22 @@ def flatten_stacked(spec: FlatSpec, stacked: Any) -> jnp.ndarray:
     return flat
 
 
+def unflatten_stacked(spec: FlatSpec, mat: jnp.ndarray, template: Any) -> Any:
+    """(K, n_padded) f32 -> pytree with (K, ...) leaves (template dtypes).
+
+    Inverse of ``flatten_stacked``; the engine's flat-sharded version ring
+    (DESIGN.md §6) gathers bases as (K, Np) rows and unflattens them only
+    for the K-client local-update vmap."""
+    k = mat.shape[0]
+    leaves = []
+    off = 0
+    for shape, dtype, size in zip(spec.shapes, spec.dtypes, spec.sizes):
+        leaves.append(mat[:, off:off + size].reshape((k,) + shape)
+                      .astype(dtype))
+        off += size
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
 def unflatten_like(spec: FlatSpec, vec: jnp.ndarray, template: Any) -> Any:
     """(n_padded,) or (n,) f32 -> pytree with the template's dtypes."""
     leaves = []
@@ -246,7 +262,7 @@ def apply_server_round(x: jnp.ndarray, bases: jnp.ndarray,
             x, bases, deltas, p, taus, mask, policy=fl.weighting,
             eta_g=fl.global_lr, s_min=fl.s_min, poly_a=fl.poly_a,
             normalize=fl.normalize, block_n=block, interpret=interpret)
-        s = staleness_degree(dists)
+        s = staleness_degree(dists, arrival_mask=mask)
         new_x = x - upd
     else:
         dists = _sq_dists(x, bases, use_kernel=(mode == "batched"),
@@ -275,9 +291,12 @@ def _weight_and_reduce(dists, deltas, p, taus, mask, fl: FLConfig, *,
     """Everything after eq. 3: staleness ratio -> policy weights -> the
     eq. 5 weighted-delta reduction. The ONE copy both the single-device
     pass and the per-shard shard_map body run, so sharded-vs-single
-    parity cannot drift when the weighting logic evolves.
+    parity cannot drift when the weighting logic evolves. The eq. 3 min
+    reference is taken over ARRIVED slots only (mask>0) — an absent
+    straggler's base must not distort the applied weights (and the
+    cohort's arrival-masked telemetry stays consistent with them).
     """
-    s = staleness_degree(dists)
+    s = staleness_degree(dists, arrival_mask=mask)
     w = contribution_weights(fl.weighting, p, s, taus, s_min=fl.s_min,
                              poly_a=fl.poly_a, normalize=fl.normalize,
                              arrival_mask=mask)

@@ -23,14 +23,36 @@ import jax.numpy as jnp
 POLICIES = ("paper", "multiplicative", "fedbuff", "polynomial", "fedasync")
 
 
-def staleness_degree(sq_dists: jnp.ndarray, eps: float = 1e-12) -> jnp.ndarray:
+def staleness_degree(sq_dists: jnp.ndarray, eps: float = 1e-12, *,
+                     ref_sq_dist=None,
+                     arrival_mask: jnp.ndarray | None = None) -> jnp.ndarray:
     """eq. (3). sq_dists: (K,) ||x^t - x^{base_i}||^2 >= 0. Returns (K,) in (0,1].
 
     A client whose base model equals the freshest base gets exactly 1.
     Degenerate all-zero distances (round 0: nobody is stale) => all ones.
+
+    ``arrival_mask`` restricts the ``min_j`` reference to arrived (mask>0)
+    slots: eq. 3's min is over BUFFERED clients, so an absent cohort slot
+    that happens to hold the freshest base must not distort the arrived
+    slots' staleness ratios. With no arrivals the reference falls back to
+    ``max(d)`` (the weights are all masked to zero downstream anyway).
+
+    ``ref_sq_dist`` replaces the ``min_j`` numerator with a fixed reference
+    squared distance instead. The streaming entry shape
+    (core/round_body.py, DESIGN.md §6) pins it to 0.0 — the current model
+    itself — because the buffer-wide min is not known when an update is
+    folded into the running accumulator; whenever the buffer holds a fresh
+    (distance-0) update the two references coincide exactly.
     """
     d = jnp.maximum(sq_dists.astype(jnp.float32), 0.0)
-    m = jnp.min(d)
+    if ref_sq_dist is not None:
+        m = jnp.asarray(ref_sq_dist, jnp.float32)
+    elif arrival_mask is not None:
+        # min over arrived slots; absent slots park on max(d) (>= any
+        # arrived distance, so it never wins while any slot arrived)
+        m = jnp.min(jnp.where(arrival_mask > 0, d, jnp.max(d)))
+    else:
+        m = jnp.min(d)
     s = (m + eps) / (d + eps)
     return jnp.clip(s, 0.0, 1.0)
 

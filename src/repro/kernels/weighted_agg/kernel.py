@@ -95,10 +95,11 @@ def _fused_server_kernel(x_ref, b_ref, d_ref, p_ref, tau_ref, m_ref,
 
     @pl.when(jnp.logical_and(ph == 1, i == 0))
     def _weights():
-        # eq. 3 — staleness degree (min over ALL K slots, masking applies
-        # to the weights only: mirrors core/weighting.py exactly)
+        # eq. 3 — staleness degree: min reference over ARRIVED slots only
+        # (absent slots park on max(d)); mirrors core/weighting.py exactly
         d = jnp.maximum(dist_ref[...], 0.0)  # (K, 1)
-        s = jnp.clip((jnp.min(d) + eps) / (d + eps), 0.0, 1.0)
+        mn = jnp.min(jnp.where(m_ref[...] > 0, d, jnp.max(d)))
+        s = jnp.clip((mn + eps) / (d + eps), 0.0, 1.0)
         p = p_ref[...]
         if policy == "paper":
             w = p / jnp.maximum(s, s_min)

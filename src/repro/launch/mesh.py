@@ -28,7 +28,9 @@ def make_round_mesh(data: int = 1, model: int = 0):
     """(data, model) mesh for the sharded round substrate (DESIGN.md §5).
 
     ``data`` carries the K-client cohort slots, ``model`` the padded flat
-    parameter vector. ``model=0`` spreads all remaining devices on the
+    parameter vector AND the engine's (R, Np) flat version ring
+    (``sharding/specs.ring_pspec``: R * Np / model per-device floats,
+    DESIGN.md §6). ``model=0`` spreads all remaining devices on the
     model axis. Unlike ``make_host_mesh`` this does not require using
     every device — scale-out sweeps (benchmarks/bench_shard_scale.py) pin
     subsets of the forced-host-device pool.

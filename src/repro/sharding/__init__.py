@@ -8,4 +8,5 @@ from repro.sharding.specs import (  # noqa: F401
     kclient_pspec,
     mesh_axis_size,
     param_pspecs,
+    ring_pspec,
 )

@@ -61,6 +61,19 @@ def flat_stacked_pspec() -> P:
     return P(None, MODEL_AXIS)
 
 
+def ring_pspec() -> P:
+    """(R, Np) flat version ring: versions replicated, Np over ``model``.
+
+    The engine's version ring stores each of the R retained versions as a
+    ``ShardedFlatSpec`` padded flat row (DESIGN.md §6), so per device the
+    ring costs ``R * n_padded / model_shards`` floats instead of R full
+    replicas — the layout that makes a deep ring pod-viable. Same layout
+    as ``flat_stacked_pspec`` (leading axis replicated, flat dim over
+    ``model``) — delegate so the two can never drift.
+    """
+    return flat_stacked_pspec()
+
+
 def kclient_pspec() -> P:
     """(K, ...) client-stacked leaves: K over ``data``, rest replicated.
 
@@ -187,7 +200,7 @@ def dist_state_pspecs(state_shape: Any, mesh) -> Any:
     return DistFLState(
         global_params=pspec,
         accum=pspec,
-        vsum=P(),
+        v_buf=P(),
         count=P(),
         version=P(),
         update_norm_ring=P(),

@@ -13,12 +13,14 @@ program (``_make_chunk_step``, scanning the shared
 cohort step runs, optionally mesh-sharded over (data, model) per
 DESIGN.md §5):
 
-    ring   (R, ...)  device-resident version ring (R = max_staleness + 1)
-    bases  = ring[base_slots]                      # gather stale bases
-    deltas = vmap(local_update)(bases, batches)    # K clients, one launch
+    ring   (R, Np)   device-resident version ring (R = max_staleness + 1)
+                     of padded FLAT parameter rows — sharded P(None,
+                     "model") on a mesh, R * Np / model_shards per device
+    bases  = ring[base_slots]                      # flat gather
+    deltas = vmap(local_update)(unflatten(bases))  # K clients, one launch
     losses = vmap(loss(params, probe_k))           # eq. 4 probes
-    params', info = apply_server_round(...)        # eq. 3 + 4 + 5
-    ring'  = ring.at[slot(t+1)].set(params')
+    x', info = apply_server_round(...)             # eq. 3 + 4 + 5
+    ring'  = ring.at[slot(t+1)].set(x')            # flat write, no round-trip
 
 Because a client's upload timeline never depends on server state (it
 trains, uploads after a sampled duration, immediately re-pulls), the
@@ -54,6 +56,8 @@ import numpy as np
 
 from repro.configs.base import FLConfig
 from repro.core.round_body import make_ring_round
+from repro.core.server_pass import flatten_tree, make_flat_spec
+from repro.sharding.specs import ring_pspec
 from repro.sim.base import (  # noqa: F401  (re-exported for callers)
     SimResult,
     make_batches,
@@ -62,6 +66,30 @@ from repro.sim.base import (  # noqa: F401  (re-exported for callers)
 )
 from repro.sim.scenarios import ClientBehavior, LatencyModel, Scenario
 from repro.sim.traces import EventTrace
+
+
+def init_version_ring(init_params: Any, fl: FLConfig, *,
+                      mesh: Optional[Any] = None, shard_ring: bool = True):
+    """Build the device-resident version ring: (R, n_padded) f32 rows.
+
+    Each of the R = max_staleness + 1 retained versions is one padded
+    flat parameter vector on the ``make_flat_spec`` layout (DESIGN.md
+    §6). With a mesh whose ``model`` axis has size m > 1 the ring is
+    placed ``P(None, "model")`` — per device it costs
+    ``R * n_padded / m`` floats instead of R full replicas.
+    ``shard_ring=False`` keeps the same flat layout but replicates the
+    rows (the bit-parity reference the multi-device tests pin against).
+    Returns ``(spec, ring)``.
+    """
+    spec = make_flat_spec(init_params, fl.server_pass_block_n, mesh=mesh)
+    ring_depth = fl.max_staleness + 1
+    flat = flatten_tree(spec, init_params)
+    ring = jnp.broadcast_to(flat[None], (ring_depth, spec.n_padded)) * 1
+    if mesh is not None:
+        pspec = (ring_pspec() if shard_ring and getattr(
+            spec, "model_shards", 1) > 1 else jax.sharding.PartitionSpec())
+        ring = jax.device_put(ring, jax.sharding.NamedSharding(mesh, pspec))
+    return spec, ring
 
 
 @functools.lru_cache(maxsize=64)
@@ -105,7 +133,8 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
                    trace: Optional[EventTrace] = None,
                    record_trace: bool = False,
                    rounds_per_launch: int = 8,
-                   mesh: Optional[Any] = None) -> SimResult:
+                   mesh: Optional[Any] = None,
+                   shard_ring: bool = True) -> SimResult:
     """Simulate buffered-async FL, many server rounds per XLA launch.
 
     Same contract as the legacy ``run_async`` plus scenario/trace hooks;
@@ -115,8 +144,11 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
     chunks are additionally clipped to eval boundaries). ``mesh`` runs
     every round through the sharded substrate (DESIGN.md §5): the
     K-client vmap over the ``data`` axis, the flat-vector server pass
-    over ``model``, with the params and version ring device-resident on
-    the mesh; no mesh is the single-device path, bit-for-bit unchanged.
+    over ``model``, with the params device-resident on the mesh and the
+    version ring stored as flat-sharded rows (``init_version_ring``:
+    R * n_padded / model_shards floats per device; ``shard_ring=False``
+    replicates the rows instead — same program, parity-test reference);
+    no mesh is the single-device path, bit-for-bit unchanged.
     """
     n = len(clients)
     k = fl.buffer_size
@@ -125,16 +157,13 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
     chunk_step = _make_chunk_step(loss_fn, fl, mesh)
 
     params = init_params
-    ring = jax.tree.map(
-        lambda x: jnp.broadcast_to(x[None], (ring_depth,) + x.shape) * 1,
-        init_params)
+    _, ring = init_version_ring(init_params, fl, mesh=mesh,
+                                shard_ring=shard_ring)
     if mesh is not None:
-        # params/ring live replicated on the mesh (the flat vector and the
+        # params live replicated on the mesh (the flat vector and the
         # K-client axis are re-partitioned inside the round's shard_maps)
-        replicated = jax.sharding.NamedSharding(
-            mesh, jax.sharding.PartitionSpec())
-        params = jax.device_put(params, replicated)
-        ring = jax.device_put(ring, replicated)
+        params = jax.device_put(params, jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec()))
     version = 0
     base_version = np.zeros(n, np.int64)
     now = 0.0
@@ -168,8 +197,9 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
         while len(window) < k:
             t, cid = heapq.heappop(events)
             num_events += 1
-            upload_idx = int(beh._upload_idx[cid])
-            if beh.dropped(cid):
+            # one atomic consume: the attempt's index AND its drop verdict
+            upload_idx, lost = beh.next_upload(cid)
+            if lost:
                 # upload lost: client re-pulls the current model, retrains
                 base_version[cid] = version
                 reschedule(cid, t)

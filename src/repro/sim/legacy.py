@@ -90,8 +90,8 @@ def run_async_legacy(loss_fn: Callable, init_params: Any, clients: Sequence,
     while server.version < total_rounds:
         now, cid = heapq.heappop(events)
         num_events += 1
-        upload_idx = int(beh._upload_idx[cid])
-        if beh.dropped(cid):  # upload lost: re-pull current model, retrain
+        upload_idx, lost = beh.next_upload(cid)
+        if lost:  # upload lost: re-pull current model, retrain
             base_version[cid] = server.version
             reschedule(cid, now)
             continue

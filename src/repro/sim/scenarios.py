@@ -116,10 +116,12 @@ class ClientBehavior:
     The engines call, per upload attempt of client ``cid``:
       * ``next_start(cid, t)``   — availability gating (deterministic);
       * ``duration(cid, t)``     — compute + upload time (consumes draw k);
-      * ``dropped(cid)``         — whether upload k is lost (separate
-                                   stream, so dropout never shifts the
-                                   duration draws).
-    All draws are recorded; ``drain_log()`` hands them to ``sim.traces``.
+      * ``next_upload(cid)``     — atomically consume the next upload:
+                                   its index k AND whether it is lost
+                                   (separate drop stream, so dropout
+                                   never shifts the duration draws).
+    ``upload_index(cid)`` peeks the next index without consuming. All
+    draws are recorded; ``drain_log()`` hands them to ``sim.traces``.
     """
 
     def __init__(self, scenario: Scenario, num_clients: int, seed: int = 0,
@@ -209,9 +211,23 @@ class ClientBehavior:
         stride = max(1, int(round(1.0 / max(sc.burst_frac, 1e-9))))
         return sc.burst_factor if (cid + j) % stride == 0 else 1.0
 
-    # -- dropouts -------------------------------------------------------
-    def dropped(self, cid: int) -> bool:
-        """Whether this client's next upload is lost (advances k)."""
+    # -- uploads / dropouts ---------------------------------------------
+    def upload_index(self, cid: int) -> int:
+        """The index k of client ``cid``'s NEXT upload (peek, no advance).
+
+        Dropped uploads consume an index too, so the stream k = 0, 1, ...
+        identifies every upload attempt — the key ``sim.traces`` records
+        drops and events under.
+        """
+        return int(self._upload_idx[cid])
+
+    def next_upload(self, cid: int) -> Tuple[int, bool]:
+        """Consume client ``cid``'s next upload: returns ``(k, dropped)``.
+
+        The ONE public way the engines advance the upload stream — index
+        sampling and the drop decision are atomic, so a caller can never
+        read the index of one attempt and the drop verdict of another.
+        """
         k = int(self._upload_idx[cid])
         self._upload_idx[cid] += 1
         if self._replay_drops is not None:
@@ -223,7 +239,7 @@ class ClientBehavior:
                 hit = bool(self._drop_rng[cid].random() < sc.dropout_p)
         if hit:
             self._drops.append((cid, k))
-        return hit
+        return k, hit
 
     # -- trace wiring ---------------------------------------------------
     def drain_log(self) -> Dict:

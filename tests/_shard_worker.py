@@ -32,7 +32,7 @@ from repro.core.server_pass import (  # noqa: E402
 )
 from repro.launch.mesh import make_round_mesh  # noqa: E402
 from repro.models.lenet import init_lenet  # noqa: E402
-from repro.sim.engine import run_vectorized  # noqa: E402
+from repro.sim.engine import init_version_ring, run_vectorized  # noqa: E402
 
 
 def _quad_loss(params, batch):
@@ -122,6 +122,42 @@ def engine_errors(mesh, rounds=6):
             "num_launches": got.num_launches}
 
 
+def ring_errors(mesh, rounds=6):
+    """Flat-SHARDED version ring vs flat replicated ring on the SAME mesh.
+
+    Only the ring's device placement differs (P(None, "model") slices vs
+    replicated rows); the compiled round is identical, so the engine
+    results must be BIT-identical — plus the per-device footprint
+    contract: each device holds R * ceil(Np_pad / model_shards) * 4
+    bytes of ring (the layout that makes a deep ring pod-viable)."""
+    fl = FLConfig(num_clients=6, buffer_size=2, local_steps=2, local_lr=0.05,
+                  batch_size=8, max_staleness=4)
+    eval_fn = lambda p: {"wnorm": float(jnp.sum(p["w"] ** 2))}  # noqa: E731
+    runs = {}
+    for name, shard in (("replicated", False), ("sharded", True)):
+        runs[name] = run_vectorized(
+            _quad_loss, {"w": jnp.zeros(4)}, _quad_clients(), fl,
+            total_rounds=rounds, eval_fn=eval_fn, eval_every=2, seed=0,
+            mesh=mesh, shard_ring=shard)
+    ref, got = runs["replicated"], runs["sharded"]
+    w_bits = max(float(np.max(np.abs(np.asarray(a["weights"])
+                                     - np.asarray(b["weights"]))))
+                 for a, b in zip(ref.round_log, got.round_log))
+    h_bits = max(abs(a["wnorm"] - b["wnorm"])
+                 for a, b in zip(ref.history, got.history))
+
+    # footprint: lenet-sized ring, every addressable shard one model slice
+    lenet = init_lenet(jax.random.PRNGKey(0))
+    spec, ring = init_version_ring(lenet, fl, mesh=mesh)
+    depth = fl.max_staleness + 1
+    expect = depth * (-(-spec.n_padded // spec.model_shards)) * 4
+    byte_err = max(abs(sh.data.nbytes - expect)
+                   for sh in ring.addressable_shards)
+    return {"ring_weights_bits": w_bits, "ring_history_bits": h_bits,
+            "ring_bytes_err": float(byte_err),
+            "per_device_ring_bytes": expect}
+
+
 def cohort_errors(mesh, cohort=4, seed=0):
     """Sharded make_cohort_step vs single-device on one quad round."""
     fl = FLConfig(buffer_size=cohort, local_steps=2, local_lr=0.1,
@@ -185,6 +221,9 @@ def run_all():
         default_block=True)
     report["engine"] = engine_errors(mesh_d2m4)
     report["cohort"] = cohort_errors(mesh_d2m4)
+    # sharded-ring vs replicated-ring: bit parity + per-device footprint
+    report["ring"] = ring_errors(mesh_d2m4)
+    report["ring_m8"] = ring_errors(mesh_m8)
     return report
 
 

@@ -198,7 +198,13 @@ class TestCohortStep:
         w_base = np.asarray(jax.tree.leaves(s1.client_base)[0][1])
         assert not np.allclose(w_stale, w_base)
         s2, mets = step(s1, batch)
-        assert float(mets["staleness_min"]) < 1.0  # slot 1 now measurably stale
+        # telemetry is arrival-masked: the still-absent straggler must NOT
+        # drag staleness_min below 1 (only the fresh slot 0 arrived)
+        assert float(mets["staleness_min"]) == pytest.approx(1.0)
+        # ... but once the straggler ARRIVES, its staleness is visible
+        batch_both = dict(batch, arrival=jnp.ones(2))
+        _, mets3 = step(s2, batch_both)
+        assert float(mets3["staleness_min"]) < 1.0
 
     def test_fedbuff_policy_reduces_to_uniform(self):
         fl_p = FLConfig(buffer_size=2, local_steps=1, local_lr=0.1,

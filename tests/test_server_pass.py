@@ -50,7 +50,7 @@ def _pad(a, npad):
 def _oracle(x, bases, deltas, losses, sizes, taus, fl, mask=None):
     """Unpadded pure-jnp eq. 3+4+5 straight from core/weighting."""
     dists = jnp.sum((bases - x[None]) ** 2, axis=1)
-    s = staleness_degree(dists)
+    s = staleness_degree(dists, arrival_mask=mask)
     p = statistical_effect(losses, sizes)
     w = contribution_weights(fl.weighting, p, s, taus, s_min=fl.s_min,
                              poly_a=fl.poly_a, normalize=fl.normalize,

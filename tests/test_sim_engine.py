@@ -171,6 +171,53 @@ class TestScenarioRegistry:
         assert res.num_events > 4 * FL.buffer_size or res.trace.drops == []
         assert len(res.trace.drops) == res.num_events - 4 * FL.buffer_size
 
+    def test_upload_index_api_and_stream(self):
+        """The public ClientBehavior upload API: ``upload_index`` peeks,
+        ``next_upload`` consumes atomically, and dropped uploads consume
+        an index too (the stream identifies every ATTEMPT)."""
+        sc = dataclasses.replace(
+            get_scenario("iid-uniform"), name="drop-k1",
+            dropout_trace=((0, 1),))  # client 0 loses its second upload
+        beh = sc.behavior(2, seed=0)
+        assert beh.upload_index(0) == 0
+        assert beh.next_upload(0) == (0, False)
+        assert beh.upload_index(0) == 1  # peek does not consume
+        assert beh.upload_index(0) == 1
+        assert beh.next_upload(0) == (1, True)  # the traced drop
+        assert beh.next_upload(0) == (2, False)
+        assert beh.next_upload(1) == (0, False)  # streams are per-client
+
+    def test_replay_pins_index_stream_across_drops(self):
+        """Trace replay re-issues the SAME (cid, k) upload stream: the
+        recorded event log's indices skip the dropped ks identically on
+        record and replay (the regression the public API guards — the
+        engine used to sample the index separately from the drop check)."""
+        sc = dataclasses.replace(  # drops that land inside a short run
+            get_scenario("dropout-trace"), name="drop-early",
+            dropout_trace=((0, 0), (1, 1), (3, 0), (3, 2)))
+        rec = run_vectorized(_quad_loss, _params(), _quad_clients(), FL,
+                             total_rounds=4, scenario=sc, seed=0,
+                             record_trace=True)
+        assert len(rec.trace.drops) > 0  # the scenario actually drops
+        rep = run_vectorized(_quad_loss, _params(), _quad_clients(), FL,
+                             total_rounds=4, trace=rec.trace, seed=99,
+                             record_trace=True)
+        # byte-identical (t, cid, k, round) streams, drops included
+        assert rep.trace.events == rec.trace.events
+        assert rep.trace.drops == rec.trace.drops
+        # accepted events never reuse a dropped (cid, k); every dropped k
+        # is still consumed (absent from events, present in the k-stream)
+        dropped = set(map(tuple, rec.trace.drops))
+        seen = {}
+        for _, cid, k, _ in rec.trace.events:
+            assert (cid, k) not in dropped
+            ks = seen.setdefault(cid, [])
+            ks.append(k)
+        for cid, ks in seen.items():
+            assert ks == sorted(ks)  # per-client indices strictly advance
+            skipped = set(range(ks[-1] + 1)) - set(ks)
+            assert skipped <= {k for c, k in dropped if c == cid}
+
     def test_trace_dropout_is_deterministic(self):
         sc = get_scenario("dropout-trace")
         r1 = run_vectorized(_quad_loss, _params(), _quad_clients(), FL,

@@ -1,5 +1,5 @@
 """Substrate tests: pytree utils (property), optimizers, schedules,
-checkpointing, data pipeline / partitioners."""
+checkpointing, data pipeline / partitioners, cohort round telemetry."""
 import os
 
 import jax
@@ -7,6 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hyp import given, settings, st
+
+from repro.configs.base import FLConfig
+from repro.core.cohort import init_cohort_state, make_cohort_step
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.data import dirichlet_partition, make_federated_image_dataset, shard_partition
@@ -198,3 +201,74 @@ class TestData:
         succ.sort(key=lambda t: -t[1])
         top_frac = succ[0][1] / sum(c for _, c in succ)
         assert top_frac > 0.15  # far above uniform 1/64
+
+
+class TestCohortMetricsMasking:
+    """Cohort round telemetry must reflect ARRIVED slots only: zero-weight
+    non-arrival (straggler) slots used to pollute staleness_min /
+    weights_max / fresh_loss_mean."""
+
+    @staticmethod
+    def _quad_loss(params, batch):
+        x, y = batch
+        return jnp.mean((x @ params["w"] - y) ** 2), {}
+
+    def _batch(self, cohort, key, probe_scale):
+        def draw(k_, scale=1.0):
+            k1, k2 = jax.random.split(k_)
+            x = jax.random.normal(k1, (8, 4))
+            y = scale * (x @ jnp.arange(1.0, 5.0)
+                         + 0.01 * jax.random.normal(k2, (8,)))
+            return x, y
+
+        return {
+            "local": jax.tree.map(
+                lambda *xs: jnp.stack(xs)[:, None],
+                *[draw(jax.random.fold_in(key, i)) for i in range(cohort)]),
+            "probe": jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[draw(jax.random.fold_in(key, 100 + i), probe_scale[i])
+                  for i in range(cohort)]),
+            "arrival": jnp.array([1.0, 1.0, 0.0]),  # slot 2 is a straggler
+            "data_sizes": jnp.array([10.0, 20.0, 30.0]),
+        }
+
+    def test_metrics_ignore_non_arrival_slots(self):
+        fl = FLConfig(buffer_size=3, local_steps=1, local_lr=0.05,
+                      weighting="paper")
+        params = {"w": jnp.zeros(4)}
+        step = jax.jit(make_cohort_step(self._quad_loss, fl))
+        state = init_cohort_state(params, 3)
+        # round 1: all slots still fresh; slot 2 stays behind and goes stale
+        batch = self._batch(3, jax.random.PRNGKey(0),
+                            probe_scale=(1.0, 1.0, 100.0))
+        state, _ = step(state, batch)
+        x_t = state.global_params  # round-2 global: the eq. 4 probe target
+        state, mets = step(state, batch)
+
+        # the straggler's huge probe loss must not leak into the mean:
+        # fresh_loss_mean == mean over the TWO arrived slots' probes only
+        arrived_fresh = np.mean([float(self._quad_loss(
+            x_t, jax.tree.map(lambda p: p[i], batch["probe"]))[0])
+            for i in range(2)])
+        np.testing.assert_allclose(float(mets["fresh_loss_mean"]),
+                                   arrived_fresh, rtol=1e-5)
+        assert float(mets["fresh_loss_mean"]) < 50.0  # 100x probe excluded
+        # slot 2 is the ONLY stale slot (staleness < 1): with it masked the
+        # min over arrived slots is exactly 1.0
+        np.testing.assert_allclose(float(mets["staleness_min"]), 1.0,
+                                   rtol=1e-6)
+        assert float(mets["weights_max"]) > 0.0
+
+    def test_no_arrivals_reports_neutral_zeros(self):
+        fl = FLConfig(buffer_size=3, local_steps=1, local_lr=0.05,
+                      weighting="paper")
+        step = jax.jit(make_cohort_step(self._quad_loss, fl))
+        state = init_cohort_state({"w": jnp.zeros(4)}, 3)
+        batch = self._batch(3, jax.random.PRNGKey(1),
+                            probe_scale=(1.0, 1.0, 1.0))
+        batch["arrival"] = jnp.zeros(3)
+        _, mets = step(state, batch)
+        for key in ("fresh_loss_mean", "staleness_min", "weights_max"):
+            assert np.isfinite(float(mets[key]))
+            np.testing.assert_allclose(float(mets[key]), 0.0, atol=1e-6)

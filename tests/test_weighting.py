@@ -33,6 +33,24 @@ class TestStalenessDegree:
         assert float(s[0]) == pytest.approx(1.0)
         assert float(s[1]) < 1e-6
 
+    def test_min_reference_over_arrived_slots_only(self):
+        # slot 1 is absent but holds the freshest base: eq. 3's min is
+        # over BUFFERED clients, so the reference comes from slot 2
+        d = jnp.array([4.0, 0.0, 1.0])
+        mask = jnp.array([1.0, 0.0, 1.0])
+        s = staleness_degree(d, arrival_mask=mask)
+        assert float(s[2]) == pytest.approx(1.0, rel=1e-5)
+        assert float(s[0]) == pytest.approx(0.25, rel=1e-4)
+        # unmasked: the absent slot would have shrunk both ratios
+        s_bad = staleness_degree(d)
+        assert float(s_bad[2]) < 1e-6
+
+    def test_pinned_reference(self):
+        # the streaming form's convention: reference = the current model
+        s = staleness_degree(jnp.array([0.0, 5.0]), ref_sq_dist=0.0)
+        assert float(s[0]) == pytest.approx(1.0)
+        assert float(s[1]) < 1e-6
+
     @given(st.lists(finite_pos, min_size=2, max_size=16))
     @settings(max_examples=50, deadline=None)
     def test_range_and_argmin_property(self, dists):
