@@ -1,0 +1,167 @@
+"""Nightly benchmark regression gate.
+
+Compares freshly produced ``BENCH_sim_engine.json`` /
+``BENCH_shard_scale.json`` against the COMMITTED baselines (``git show
+<ref>:<file>``) and exits non-zero on a real regression, so the nightly
+lane goes red instead of silently uploading artifacts:
+
+* throughput: any tracked events/sec figure dropping more than
+  ``--threshold`` (default 20% — forced-host-device CPU numbers are
+  noisy, real regressions are structural and large);
+* speedup: the sim-engine vectorized/legacy ratio — hardware-RELATIVE,
+  so it stays meaningful even when the runner differs from the machine
+  that produced the baseline;
+* launch count: the engine's num_launches growing AT ALL (the
+  O(T / rounds_per_launch) dispatch contract is exact, not statistical).
+
+Absolute events/sec baselines encode the hardware they were measured
+on: after a runner-class change, regenerate ``BENCH_*.json`` from a
+nightly artifact and commit it, or the gate reds on hardware delta.
+
+Usage (the nightly job, after the benches rewrote the files in place):
+
+    python -m benchmarks.check_regression            # baseline = HEAD
+    python -m benchmarks.check_regression --baseline-ref origin/main
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List, Optional, Tuple
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def load_baseline(name: str, ref: str) -> Optional[dict]:
+    """The committed version of ``name`` at ``ref`` (None if absent)."""
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"{ref}:{name}"], capture_output=True,
+            text=True, cwd=ROOT, check=True).stdout
+        return json.loads(blob)
+    except (subprocess.CalledProcessError, json.JSONDecodeError):
+        return None
+
+
+def load_fresh(name: str) -> Optional[dict]:
+    path = os.path.join(ROOT, name)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _get(d: dict, path: Tuple[str, ...]) -> Optional[float]:
+    for key in path:
+        if not isinstance(d, dict) or key not in d:
+            return None
+        d = d[key]
+    return d  # type: ignore[return-value]
+
+
+def sim_engine_metrics(doc: dict) -> Dict[str, float]:
+    """Vectorized events/sec per workload, plus the vectorized/legacy
+    speedup (hardware-relative: both sides ran on the same machine)."""
+    out = {}
+    for wname, rec in doc.get("workloads", {}).items():
+        v = _get(rec, ("vectorized", "events_per_sec"))
+        if v is not None:
+            out[f"sim_engine/{wname}/events_per_sec"] = float(v)
+        s = rec.get("speedup")
+        if s is not None:
+            out[f"sim_engine/{wname}/speedup"] = float(s)
+    return out
+
+
+def shard_scale_metrics(doc: dict) -> Dict[str, float]:
+    out = {}
+    for d, rec in doc.get("records", {}).items():
+        v = _get(rec, ("engine", "events_per_sec"))
+        if v is not None:
+            out[f"shard_scale/D={d}/events_per_sec"] = float(v)
+    return out
+
+
+def shard_scale_launches(doc: dict) -> Dict[str, int]:
+    out = {}
+    for d, rec in doc.get("records", {}).items():
+        v = _get(rec, ("engine", "num_launches"))
+        if v is not None:
+            out[f"shard_scale/D={d}/num_launches"] = int(v)
+    return out
+
+
+def compare(fresh: Dict[str, float], base: Dict[str, float],
+            threshold: float, launches: bool = False) -> List[str]:
+    """Failure messages for every regressed metric present in BOTH."""
+    failures = []
+    for key, base_v in sorted(base.items()):
+        if key not in fresh:
+            continue
+        fresh_v = fresh[key]
+        if launches:
+            if fresh_v > base_v:
+                failures.append(
+                    f"{key}: {fresh_v} launches vs baseline {base_v} — the "
+                    "dispatch-count contract regressed")
+            continue
+        if base_v > 0 and fresh_v < (1.0 - threshold) * base_v:
+            failures.append(
+                f"{key}: {fresh_v:.1f} vs baseline {base_v:.1f} "
+                f"({fresh_v / base_v - 1.0:+.1%}, gate -{threshold:.0%})")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline-ref", default="HEAD",
+                    help="git ref holding the committed baseline files")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="max tolerated events/sec drop (fraction)")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail when a baseline or fresh file is missing "
+                         "(default: skip that file with a note)")
+    args = ap.parse_args()
+
+    checks = (
+        ("BENCH_sim_engine.json", sim_engine_metrics, False),
+        ("BENCH_shard_scale.json", shard_scale_metrics, False),
+        ("BENCH_shard_scale.json", shard_scale_launches, True),
+    )
+    failures: List[str] = []
+    missing = 0
+    for name, extract, launches in checks:
+        base_doc = load_baseline(name, args.baseline_ref)
+        fresh_doc = load_fresh(name)
+        if base_doc is None or fresh_doc is None:
+            missing += 1
+            which = "baseline" if base_doc is None else "fresh"
+            print(f"[skip] {name}: no {which} copy "
+                  f"({'fails' if args.strict else 'ignored'} "
+                  f"under --strict)")
+            continue
+        base, fresh = extract(base_doc), extract(fresh_doc)
+        errs = compare(fresh, base, args.threshold, launches=launches)
+        tag = "launches" if launches else "events/sec"
+        for key in sorted(set(base) & set(fresh)):
+            print(f"  {key}: {base[key]:.1f} -> {fresh[key]:.1f}")
+        if errs:
+            failures.extend(errs)
+        else:
+            print(f"[ok]   {name} ({tag}): {len(set(base) & set(fresh))} "
+                  "metrics within gate")
+    if args.strict and missing:
+        failures.append(f"{missing} baseline/fresh file(s) missing")
+    if failures:
+        print("\nREGRESSIONS:")
+        for f in failures:
+            print(f"  {f}")
+        sys.exit(1)
+    print("\nno regressions")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,10 +18,16 @@ import sys
 import time
 
 
+KNOWN = ("fig1", "ablation", "buffer_k", "kernels", "server", "sim_engine",
+         "shard_scale", "roofline")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None, choices=KNOWN,
+                    help="run one benchmark (a typo used to silently "
+                         "select NOTHING and exit 0 — now an error)")
     args = ap.parse_args()
     quick = not args.full
 
@@ -56,16 +62,29 @@ def main() -> None:
         from benchmarks import roofline
         jobs.append(("roofline", roofline.main))
 
-    failures = 0
+    failures = []
     for name, fn in jobs:
         print(f"\n=== {name} ===")
         t0 = time.time()
         try:
             fn()
-            print(f"--- {name} done in {time.time() - t0:.1f}s")
+        except SystemExit as e:
+            # a sub-benchmark calling sys.exit() must neither abort the
+            # remaining benches nor (worse) exit THIS harness with 0
+            code = (0 if e.code is None
+                    else e.code if isinstance(e.code, int) else 1)
+            if code:
+                failures.append(name)
+                print(f"--- {name} FAILED: sys.exit({e.code})")
+            else:
+                print(f"--- {name} done in {time.time() - t0:.1f}s")
         except Exception as e:  # noqa: BLE001
-            failures += 1
+            failures.append(name)
             print(f"--- {name} FAILED: {type(e).__name__}: {e}")
+        else:
+            print(f"--- {name} done in {time.time() - t0:.1f}s")
+    if failures:
+        print(f"\nFAILED benchmarks: {', '.join(failures)}")
     sys.exit(1 if failures else 0)
 
 

@@ -4,6 +4,15 @@ Flattens a pytree with jax.tree_util key-paths so arbitrary nested
 dict/list/tuple/NamedTuple structures round-trip. The treedef is restored
 from a caller-provided template (``like=``) which keeps loading safe and
 simple; a structure-free load returns a flat {keypath: array} dict.
+
+Multi-host (DESIGN.md §7): ``save_checkpoint`` is coordinator-gated —
+every process converts its leaves to host numpy (process-spanning arrays
+are read from process-local addressable shards, with one resharding
+collective for non-replicated leaves, so ALL processes must call save),
+but only process 0 touches the filesystem. The engine's state
+(``sim/engine.py::engine_state_to_tree``) is identical on every process
+by the multi-controller determinism contract, so the coordinator's file
+is the global truth.
 """
 from __future__ import annotations
 
@@ -19,11 +28,37 @@ def _key_str(path) -> str:
     return jax.tree_util.keystr(path)
 
 
-def save_checkpoint(path: str, tree: Any, step: Optional[int] = None) -> None:
+def _is_coordinator() -> bool:
+    # delegate so the coordinator convention lives in ONE place
+    # (lazy import: jax-only module, but keep ckpt import-light)
+    from repro.launch.multihost import is_coordinator
+    return is_coordinator()
+
+
+def _to_host(v) -> np.ndarray:
+    """Leaf -> host numpy, safe for process-spanning jax.Arrays."""
+    if isinstance(v, jax.Array) and not v.is_fully_addressable:
+        from repro.launch.multihost import fetch_replicated
+        return fetch_replicated(v)
+    return np.asarray(v)
+
+
+def save_checkpoint(path: str, tree: Any, step: Optional[int] = None, *,
+                    coordinator_only: bool = True) -> None:
+    """Write ``tree`` to ``path`` atomically (tmp file + rename).
+
+    In a multi-process session every process MUST call this (leaf
+    fetching may involve a collective for non-replicated arrays), but
+    with ``coordinator_only=True`` (the default) only process 0 writes —
+    N processes racing one filesystem path is never correct.
+    ``coordinator_only=False`` is for process-private paths only.
+    """
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
-    payload = {_key_str(p): np.asarray(v) for p, v in flat}
+    payload = {_key_str(p): _to_host(v) for p, v in flat}
     if step is not None:
         payload["__step__"] = np.asarray(step)
+    if coordinator_only and not _is_coordinator():
+        return
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     # atomic write: tmp file + rename
     d = os.path.dirname(os.path.abspath(path))

@@ -74,7 +74,13 @@ from repro.core.weighting import (
     staleness_degree,
     statistical_effect,
 )
-from repro.sharding.specs import DATA_AXIS, kclient_pspec, mesh_axis_size
+from repro.sharding.specs import (
+    DATA_AXIS,
+    MODEL_AXIS,
+    flat_param_pspec,
+    kclient_pspec,
+    mesh_axis_size,
+)
 from repro.utils.pytree import tree_sub
 
 
@@ -166,8 +172,19 @@ def make_round_body(loss_fn: Callable, fl: FLConfig, *,
         # dtype-cast tree so a fresh (tau=0) client's eq. 3 distance
         # stays exactly 0
         if all(jnp.dtype(dt) == jnp.float32 for dt in spec.dtypes):
-            return new_params, new_x, info
-        return new_params, flatten_tree(spec, new_params), info
+            flat_new = new_x
+        else:
+            flat_new = flatten_tree(spec, new_params)
+        if mesh is not None and mesh_axis_size(mesh, MODEL_AXIS) > 1:
+            # the ring row must stay on the ring's P(None, "model") layout
+            # so the engine's slot write is shard-local — on a
+            # process-spanning mesh an unconstrained re-flatten would let
+            # the partitioner replicate the row (a cross-process
+            # broadcast per round) before the write re-shards it
+            flat_new = jax.lax.with_sharding_constraint(
+                flat_new, jax.sharding.NamedSharding(mesh,
+                                                     flat_param_pspec()))
+        return new_params, flat_new, info
 
     return body
 

@@ -68,7 +68,7 @@ from repro.core.weighting import (
 )
 from repro.kernels.weighted_agg import kernel as _k
 from repro.kernels.weighted_agg import ops as _ops
-from repro.sharding.specs import MODEL_AXIS, mesh_axis_size
+from repro.sharding.specs import MODEL_AXIS, info_pspec, mesh_axis_size
 
 logger = logging.getLogger(__name__)
 
@@ -346,6 +346,13 @@ def _apply_server_round_sharded(x, bases, deltas, losses, p, taus, mask,
         check_rep=False)(x, bases, deltas, p, taus, mask)
     info = {"sq_dists": dists, "staleness": s, "stat_effect": p,
             "weights": w, "fresh_loss": losses}
+    # multi-host contract (DESIGN.md §7): info stays FULLY REPLICATED so
+    # every process can read the round log from its own addressable
+    # shards — pin it so the partitioner can never reshard it over a
+    # process-spanning axis downstream (e.g. under the engine's scan)
+    rep = jax.sharding.NamedSharding(mesh, info_pspec())
+    info = jax.tree.map(
+        lambda a: jax.lax.with_sharding_constraint(a, rep), info)
     return new_x, info
 
 

@@ -59,6 +59,18 @@ class ClientDataset:
         return (self.x[idx].reshape(count, batch_size, *self.x.shape[1:]),
                 self.y[idx].reshape(count, batch_size, *self.y.shape[1:]))
 
+    # -- checkpointing (engine resume) ----------------------------------
+    def rng_state(self) -> np.ndarray:
+        """(6,) uint64 snapshot of the batch-sampling stream."""
+        from repro.utils.rngstate import pack_pcg64
+        return pack_pcg64([self._rng])[0]
+
+    def set_rng_state(self, row: np.ndarray) -> None:
+        """Restore ``rng_state``: the next batch draw continues the
+        snapshotted stream exactly."""
+        from repro.utils.rngstate import unpack_pcg64
+        self._rng = unpack_pcg64(np.asarray(row)[None])[0]
+
 
 def synthetic_image_classes(num_samples: int, num_classes: int = 10,
                             shape=(28, 28, 1), noise: float = 0.35,

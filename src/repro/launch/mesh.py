@@ -34,10 +34,22 @@ def make_round_mesh(data: int = 1, model: int = 0):
     model axis. Unlike ``make_host_mesh`` this does not require using
     every device — scale-out sweeps (benchmarks/bench_shard_scale.py) pin
     subsets of the forced-host-device pool.
+
+    In a multi-process session (``jax.distributed`` initialized via
+    ``launch/multihost.initialize``) this delegates to
+    ``multihost.make_round_mesh``, which lays the data axis across
+    processes so the model-axis collectives stay intra-host (DESIGN.md
+    §7 — the bit-parity layout).
     """
     import numpy as np
     from jax.sharding import Mesh
 
+    if jax.process_count() > 1:
+        from repro.launch.multihost import make_round_mesh as _mh_mesh
+        # the single-host default data=1 means "no data parallelism";
+        # multi-host needs data % process_count == 0, so map it to
+        # multihost's own default (one data row per process)
+        return _mh_mesh(data=0 if data <= 1 else data, model=model)
     devices = jax.devices()
     if model == 0:
         model = max(1, len(devices) // data)

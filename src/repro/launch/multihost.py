@@ -1,0 +1,173 @@
+"""Multi-host execution substrate (DESIGN.md §7).
+
+One Python process per host, every process running the SAME program
+(single-program multi-controller): ``initialize`` brings up
+``jax.distributed`` (gloo collectives on CPU), ``make_round_mesh`` builds
+the process-spanning (data, model) mesh, and the put/fetch helpers move
+host values onto a mesh that spans processes and read results back from
+**process-local addressable shards** — never ``jax.device_get`` on a
+non-addressable array.
+
+Layout contract (what makes multi-host bit-identical to single-host):
+the ``data`` axis is split across processes (each process contributes
+whole data rows of its local devices) and the ``model`` axis stays
+WITHIN a process whenever ``data >= process_count``. The eq. 3 psum over
+``model`` then reduces the same per-shard partials in the same intra-host
+collective as the equally-shaped single-process mesh, so the round log
+and final params match bit-for-bit (pinned by tests/_multihost_worker.py).
+Cross-process traffic on the engine path is pure data movement — the
+``data``-axis allgather of client deltas and the replication broadcast of
+the new params — which is exact.
+
+Every process runs the engine's host event loop on the same seeds, so
+per-round metadata (windows, batches, staleness) is identical everywhere
+without communication; device arrays are the only shared state. IO is
+coordinator-gated: ``is_coordinator()`` (process 0) guards checkpoint
+writes and log emission (see checkpoint/ckpt.py, launch/program.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_INITIALIZED = False
+
+
+def initialize(coordinator_address: str, num_processes: int,
+               process_id: int, *,
+               cpu_collectives: str = "gloo") -> None:
+    """Bring up the jax.distributed runtime for one process.
+
+    Must run before any computation touches the backend. On CPU the
+    cross-process collectives need a real implementation (the default is
+    none): ``cpu_collectives`` selects it — gloo ships in jaxlib's Linux
+    wheels and is what the CI harness uses. Idempotent per process.
+    """
+    global _INITIALIZED
+    if _INITIALIZED:
+        return
+    if num_processes > 1:
+        try:
+            jax.config.update("jax_cpu_collectives_implementation",
+                              cpu_collectives)
+        except AttributeError:  # renamed/absent on this jax: use defaults
+            pass
+        jax.distributed.initialize(coordinator_address=coordinator_address,
+                                   num_processes=num_processes,
+                                   process_id=process_id)
+    _INITIALIZED = True
+
+
+def is_coordinator() -> bool:
+    """True on process 0 — the only process that writes (ckpt, logs)."""
+    return jax.process_index() == 0
+
+
+def mesh_spans_processes(mesh: Optional[Any]) -> bool:
+    """True when ``mesh`` contains devices of more than one process."""
+    if mesh is None:
+        return False
+    procs = {d.process_index for d in np.asarray(mesh.devices).flat}
+    return len(procs) > 1
+
+
+def make_round_mesh(data: int = 0, model: int = 0) -> Mesh:
+    """Process-spanning (data, model) mesh for the round substrate.
+
+    Each process contributes ``data / process_count`` whole rows of
+    ``model`` of its OWN local devices, so the ``model`` axis — the eq. 3
+    psum and the ``P(None, "model")`` version ring — never crosses a
+    process boundary and the reduction structure matches the same-shaped
+    single-process mesh exactly (the bit-parity contract). ``data=0``
+    defaults to one row per process; ``model=0`` spreads each process's
+    remaining local devices on the model axis. Single-process sessions
+    get the same layout as ``launch/mesh.make_round_mesh``.
+    """
+    procs = jax.process_count()
+    local = len(jax.local_devices())
+    if data == 0:
+        data = procs
+    if data % procs:
+        raise ValueError(
+            f"data axis ({data}) must be a multiple of the process count "
+            f"({procs}): each process contributes whole data rows")
+    rows_per_proc = data // procs
+    if model == 0:
+        model = max(1, local // rows_per_proc)
+    need = rows_per_proc * model
+    if need > local:
+        raise ValueError(
+            f"mesh ({data}, {model}) needs {need} devices per process, "
+            f"process {jax.process_index()} has {local}")
+    by_proc: dict = {}
+    for d in jax.devices():
+        by_proc.setdefault(d.process_index, []).append(d)
+    rows = []
+    for p in sorted(by_proc):
+        devs = sorted(by_proc[p], key=lambda d: d.id)[:need]
+        rows.extend(np.asarray(devs).reshape(rows_per_proc, model))
+    return Mesh(np.stack(rows), ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# host <-> process-spanning-mesh transfers
+# ---------------------------------------------------------------------------
+
+
+def put_with_sharding(value: Any, mesh: Mesh, pspec: P) -> jax.Array:
+    """Place a host value on ``mesh`` under ``pspec``, processes included.
+
+    Every process must call this with the SAME value (the
+    single-program-multi-controller contract; the engine's host event
+    loop guarantees it by determinism). Uses ``make_array_from_callback``
+    so each process materialises only its addressable shards.
+    """
+    sharding = NamedSharding(mesh, pspec)
+    if not mesh_spans_processes(mesh):
+        # single-process mesh: plain device_put (an on-device reshard
+        # when the value already lives on device — no host round-trip)
+        return jax.device_put(value, sharding)
+    arr = np.asarray(value)
+    return jax.make_array_from_callback(arr.shape, sharding,
+                                        lambda idx: arr[idx])
+
+
+def put_replicated(tree: Any, mesh: Mesh) -> Any:
+    """Replicate every leaf of a host pytree across the whole mesh."""
+    return jax.tree.map(lambda x: put_with_sharding(x, mesh, P()), tree)
+
+
+def fetch_replicated(tree: Any) -> Any:
+    """Fetch a pytree of device arrays to host numpy, multi-process safe.
+
+    The multi-host replacement for the engine's end-of-run
+    ``jax.device_get``: fully-addressable arrays fetch normally; a fully
+    replicated process-spanning array is read from the FIRST
+    PROCESS-LOCAL ADDRESSABLE SHARD (its data is the whole array — no
+    communication, every process gets the full value); anything else is
+    first all-gathered to every process by a resharding identity jit
+    (one collective), then read locally. ``jax.device_get`` is never
+    called on a non-addressable array.
+    """
+
+    def leaf(x):
+        if not isinstance(x, jax.Array) or x.is_fully_addressable:
+            return np.asarray(jax.device_get(x))
+        if not x.is_fully_replicated:
+            x = _replicate_fn(NamedSharding(x.sharding.mesh, P()))(x)
+        return np.asarray(x.addressable_shards[0].data)
+
+    return jax.tree.map(leaf, tree)
+
+
+@functools.lru_cache(maxsize=32)
+def _replicate_fn(sharding: NamedSharding):
+    """One cached resharding identity jit per target sharding — a fresh
+    lambda per call would defeat jax's jit cache and recompile on every
+    fetch of a non-replicated leaf."""
+    return jax.jit(lambda a: a, out_shardings=sharding)

@@ -197,6 +197,45 @@ def _build_dist_train(model, fl, shape, mesh, baxes, dp, meta) -> Program:
         donate_argnums=(0,), meta=meta)
 
 
+def make_io_hooks(*, ckpt_path: Optional[str] = None, ckpt_every: int = 0,
+                  log_fn: Callable[[str], None] = print):
+    """Coordinator-gated IO for multi-controller training loops (§7).
+
+    Returns ``(log, eval_metrics, maybe_save)``:
+
+    * ``log(msg)`` — emits only on process 0 (every process may call it);
+    * ``eval_metrics(metrics)`` — fetches a metrics pytree to host floats
+      from process-local addressable shards (ALL processes must call it:
+      non-replicated leaves cost one resharding collective), returning
+      the dict everywhere so control flow stays identical across
+      processes;
+    * ``maybe_save(step, tree)`` — writes ``ckpt_path`` every
+      ``ckpt_every`` steps via the coordinator-gated
+      ``checkpoint.save_checkpoint`` (again: call on every process).
+
+    Keeping the gate in ONE place means a training loop written against
+    these hooks runs unchanged on a laptop and on a pod slice.
+    """
+    from repro.checkpoint import save_checkpoint
+    from repro.launch.multihost import fetch_replicated, is_coordinator
+
+    def log(msg: str) -> None:
+        if is_coordinator():
+            log_fn(msg)
+
+    def eval_metrics(metrics: Any) -> Dict[str, float]:
+        host = fetch_replicated(metrics)
+        return {k: float(np.asarray(v)) for k, v in host.items()}
+
+    def maybe_save(step: int, tree: Any) -> bool:
+        if not ckpt_path or not ckpt_every or step % ckpt_every:
+            return False
+        save_checkpoint(ckpt_path, tree, step=step)
+        return True
+
+    return log, eval_metrics, maybe_save
+
+
 def _build_prefill(model, shape, arch, mesh, baxes, dp, meta) -> Program:
     cfg = model.cfg
     fsdp = arch.fl_mode == "distributed"

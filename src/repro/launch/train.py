@@ -88,7 +88,20 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--weighting", default="paper")
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint path (coordinator-gated: only "
+                         "process 0 writes)")
+    ap.add_argument("--ckpt-every", type=int, default=5)
+    # multi-host (DESIGN.md §7): same flags on every process
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port of process 0 (enables jax.distributed)")
+    ap.add_argument("--num-processes", type=int, default=1)
+    ap.add_argument("--process-id", type=int, default=0)
     args = ap.parse_args()
+
+    if args.coordinator and args.num_processes > 1:
+        from repro.launch.multihost import initialize
+        initialize(args.coordinator, args.num_processes, args.process_id)
 
     arch = get_arch(args.arch)
     shape = INPUT_SHAPES[args.shape]
@@ -109,6 +122,10 @@ def main() -> None:
     step = jax.jit(make_cohort_step(model.loss, fl), donate_argnums=0)
     sizes = jnp.asarray(rng.integers(500, 2000, cohort), jnp.float32)
 
+    from repro.launch.program import make_io_hooks
+    log, eval_metrics, maybe_save = make_io_hooks(
+        ckpt_path=args.ckpt, ckpt_every=args.ckpt_every)
+
     with mesh:
         for r in range(args.rounds):
             batch = make_batches(cfg, cohort, fl.local_steps, b, 2, seq, rng)
@@ -117,11 +134,13 @@ def main() -> None:
             batch["data_sizes"] = sizes
             t0 = time.time()
             state, mets = step(state, batch)
-            mets = jax.tree.map(float, mets)
-            print(f"round {r + 1}: fresh_loss={mets['fresh_loss_mean']:.4f} "
-                  f"|u|^2={mets['update_sq_norm']:.3e} "
-                  f"arrivals={int(sched[r].sum())} ({time.time() - t0:.1f}s)")
-    print("done; global version =", int(state.version))
+            mets = eval_metrics(mets)
+            log(f"round {r + 1}: fresh_loss={mets['fresh_loss_mean']:.4f} "
+                f"|u|^2={mets['update_sq_norm']:.3e} "
+                f"arrivals={int(sched[r].sum())} ({time.time() - t0:.1f}s)")
+            maybe_save(r + 1, {"params": state.global_params,
+                               "version": state.version})
+    log(f"done; global version = {int(state.version)}")
 
 
 if __name__ == "__main__":

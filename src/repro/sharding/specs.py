@@ -82,6 +82,19 @@ def kclient_pspec() -> P:
     return P(DATA_AXIS)
 
 
+def info_pspec() -> P:
+    """(K,) per-round info arrays (weights, sq_dists, ...): replicated.
+
+    This is a multi-host CONTRACT, not just a layout: the round's info
+    outputs are pinned fully replicated so every process can read the
+    round log from its own addressable shards (DESIGN.md §7) — the
+    engine never issues a ``jax.device_get`` on a non-addressable array.
+    ``core/server_pass.py`` enforces it with a sharding constraint on the
+    mesh path.
+    """
+    return P()
+
+
 def _div(dim: int, size: int) -> bool:
     return size > 0 and dim % size == 0
 

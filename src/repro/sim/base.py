@@ -25,6 +25,9 @@ class SimResult:
     num_events: int = 0  # uploads processed (incl. dropped)
     num_launches: int = 0  # XLA dispatches issued (0 = runner doesn't count)
     trace: Optional[EventTrace] = None
+    # engine checkpointing (run_vectorized(capture_state=True)): the
+    # host-side EngineState snapshot a resumed run restarts from
+    final_state: Optional[object] = None
 
     def rounds_to_target(self, metric: str, target: float) -> Optional[int]:
         for h in self.history:
@@ -53,6 +56,76 @@ def record_eval(history: List[Dict], eval_fn, version: int, now: float,
             and history[-1]["time"] == now:
         return
     history.append({"round": version, "time": now, **eval_fn(params)})
+
+
+def round_log_to_arrays(round_log: List[Dict]) -> Dict[str, np.ndarray]:
+    """Engine round log (list of per-round dicts) -> dict of stacked arrays.
+
+    The npz-friendly form ``checkpoint/ckpt.py`` stores: every per-slot
+    field becomes a (T, K) array (f32 — the dtype the device produced, so
+    the round-trip is bit-exact), ``clients`` (T, K) int64, ``version``
+    (T,) int64. Requires the constant K the engine guarantees
+    (K = buffer_size on every round).
+    """
+    if not round_log:
+        return {"version": np.zeros((0,), np.int64)}
+    ks = {r["k"] for r in round_log}
+    if len(ks) != 1:
+        raise ValueError(f"round log mixes buffer sizes {sorted(ks)}")
+    out = {
+        "version": np.asarray([r["version"] for r in round_log], np.int64),
+        "k": np.asarray([r["k"] for r in round_log], np.int64),
+        "clients": np.asarray([r["clients"] for r in round_log], np.int64),
+        "tau": np.asarray([r["tau"] for r in round_log], np.int64),
+    }
+    for key in ("weights", "staleness_deg", "stat_effect", "sq_dists"):
+        out[key] = np.asarray([r[key] for r in round_log], np.float32)
+    return out
+
+
+def round_log_from_arrays(arrays: Dict[str, np.ndarray]) -> List[Dict]:
+    """Inverse of ``round_log_to_arrays``."""
+    versions = np.asarray(arrays["version"])
+    out: List[Dict] = []
+    for j in range(len(versions)):
+        out.append({
+            "version": int(versions[j]),
+            "weights": np.asarray(arrays["weights"][j]).tolist(),
+            "staleness_deg": np.asarray(arrays["staleness_deg"][j]).tolist(),
+            "stat_effect": np.asarray(arrays["stat_effect"][j]).tolist(),
+            "sq_dists": np.asarray(arrays["sq_dists"][j]).tolist(),
+            "tau": [int(t) for t in arrays["tau"][j]],
+            "clients": [int(c) for c in arrays["clients"][j]],
+            "k": int(arrays["k"][j]),
+        })
+    return out
+
+
+def history_to_arrays(history: List[Dict]) -> Dict[str, np.ndarray]:
+    """Eval history -> dict of (E,) arrays (uniform keys per run)."""
+    if not history:
+        return {"round": np.zeros((0,), np.int64)}
+    keys = set(history[0])
+    for h in history:
+        if set(h) != keys:
+            raise ValueError("history rows have differing keys; cannot stack")
+    out: Dict[str, np.ndarray] = {
+        "round": np.asarray([h["round"] for h in history], np.int64)}
+    for key in sorted(keys - {"round"}):
+        out[key] = np.asarray([h[key] for h in history], np.float64)
+    return out
+
+
+def history_from_arrays(arrays: Dict[str, np.ndarray]) -> List[Dict]:
+    """Inverse of ``history_to_arrays``."""
+    rounds = np.asarray(arrays["round"])
+    out: List[Dict] = []
+    for j in range(len(rounds)):
+        row = {"round": int(rounds[j])}
+        for key in sorted(k for k in arrays if k != "round"):
+            row[key] = float(np.asarray(arrays[key])[j])
+        out.append(row)
+    return out
 
 
 def make_batches(ds, batch_size: int, steps: int):

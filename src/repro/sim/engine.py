@@ -28,11 +28,13 @@ host can walk the event heap **ahead of the device**: it pre-computes up
 to ``rounds_per_launch`` windows of (batches, base slots, staleness,
 probes) as stacked ``(S, K, ...)`` arrays and drives all S rounds
 through one ``jax.lax.scan`` launch, the version ring advancing
-on-device between rounds. The round log is fetched with a single
-``jax.device_get`` at the end of the run, so a T-round simulation costs
-O(T / rounds_per_launch) launches and O(1) log syncs instead of the
-legacy O(T*K) launches and O(T) syncs. Launch chunks are clipped to
-eval boundaries, so the eval cadence is identical to the legacy loop.
+on-device between rounds. The round log is fetched once at the end of
+the run — ``jax.device_get`` on one host, process-local addressable
+shards on a process-spanning mesh (DESIGN.md §7) — so a T-round
+simulation costs O(T / rounds_per_launch) launches and O(1) log syncs
+instead of the legacy O(T*K) launches and O(T) syncs. Launch chunks are
+clipped to eval boundaries, so the eval cadence is identical to the
+legacy loop.
 
 Event semantics match the legacy loop event-for-event on the scenarios
 both can express (tested in tests/test_sim_engine.py): uploads are
@@ -48,7 +50,7 @@ from __future__ import annotations
 
 import functools
 import heapq
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,39 +59,121 @@ import numpy as np
 from repro.configs.base import FLConfig
 from repro.core.round_body import make_ring_round
 from repro.core.server_pass import flatten_tree, make_flat_spec
+from repro.launch.multihost import (
+    fetch_replicated,
+    mesh_spans_processes,
+    put_replicated,
+    put_with_sharding,
+)
 from repro.sharding.specs import ring_pspec
 from repro.sim.base import (  # noqa: F401  (re-exported for callers)
     SimResult,
+    history_from_arrays,
+    history_to_arrays,
     make_batches,
     record_eval,
     resolve_behavior,
+    round_log_from_arrays,
+    round_log_to_arrays,
 )
 from repro.sim.scenarios import ClientBehavior, LatencyModel, Scenario
 from repro.sim.traces import EventTrace
 
 
 def init_version_ring(init_params: Any, fl: FLConfig, *,
-                      mesh: Optional[Any] = None, shard_ring: bool = True):
+                      mesh: Optional[Any] = None, shard_ring: bool = True,
+                      rows: Optional[np.ndarray] = None):
     """Build the device-resident version ring: (R, n_padded) f32 rows.
 
     Each of the R = max_staleness + 1 retained versions is one padded
     flat parameter vector on the ``make_flat_spec`` layout (DESIGN.md
     §6). With a mesh whose ``model`` axis has size m > 1 the ring is
     placed ``P(None, "model")`` — per device it costs
-    ``R * n_padded / m`` floats instead of R full replicas.
-    ``shard_ring=False`` keeps the same flat layout but replicates the
-    rows (the bit-parity reference the multi-device tests pin against).
-    Returns ``(spec, ring)``.
+    ``R * n_padded / m`` floats instead of R full replicas; on a
+    process-spanning mesh (DESIGN.md §7) each PROCESS holds only its
+    model slice of every row. ``shard_ring=False`` keeps the same flat
+    layout but replicates the rows (the bit-parity reference the
+    multi-device tests pin against). ``rows`` restores the ring from a
+    checkpointed (R, n_padded) host matrix instead of broadcasting the
+    initial params. Returns ``(spec, ring)``.
     """
     spec = make_flat_spec(init_params, fl.server_pass_block_n, mesh=mesh)
     ring_depth = fl.max_staleness + 1
-    flat = flatten_tree(spec, init_params)
-    ring = jnp.broadcast_to(flat[None], (ring_depth, spec.n_padded)) * 1
+    if rows is None:
+        flat = flatten_tree(spec, init_params)
+        ring = jnp.broadcast_to(flat[None], (ring_depth, spec.n_padded)) * 1
+    else:
+        if tuple(rows.shape) != (ring_depth, spec.n_padded):
+            raise ValueError(
+                f"checkpointed ring shape {tuple(rows.shape)} does not match "
+                f"this run's layout {(ring_depth, spec.n_padded)} — same "
+                "model/fl config required to resume")
+        ring = jnp.asarray(rows, jnp.float32)
     if mesh is not None:
         pspec = (ring_pspec() if shard_ring and getattr(
             spec, "model_shards", 1) > 1 else jax.sharding.PartitionSpec())
-        ring = jax.device_put(ring, jax.sharding.NamedSharding(mesh, pspec))
+        ring = put_with_sharding(ring, mesh, pspec)
     return spec, ring
+
+
+class EngineState(NamedTuple):
+    """Host-side snapshot of a ``run_vectorized`` run at a round boundary.
+
+    Everything a resumed run needs to be BIT-identical to the
+    uninterrupted one: the version ring + params, the host event heap,
+    the per-client behavior RNG streams (``ClientBehavior.get_state``),
+    and the round log / eval history accumulated so far. Serialise with
+    ``engine_state_to_tree`` (arrays only — ``checkpoint/ckpt.py``
+    npz-safe) and restore with ``engine_state_from_tree``.
+    """
+
+    version: int
+    now: float
+    num_events: int
+    base_version: np.ndarray  # (n,) int64
+    events: Tuple[Tuple[float, int], ...]  # pending (t, cid) uploads
+    params: Any  # host pytree
+    ring: np.ndarray  # (R, n_padded) f32
+    behavior: Dict[str, np.ndarray]
+    dataset_rng: np.ndarray  # (n, 6) uint64 ClientDataset batch streams
+    history: List[Dict]
+    round_log: List[Dict]
+
+
+def engine_state_to_tree(state: EngineState) -> Dict[str, Any]:
+    """EngineState -> pytree of plain arrays (``save_checkpoint``-able)."""
+    ev = np.asarray(sorted(state.events), np.float64).reshape(-1, 2)
+    return {
+        "meta": {"version": np.int64(state.version),
+                 "now": np.float64(state.now),
+                 "num_events": np.int64(state.num_events)},
+        "base_version": np.asarray(state.base_version, np.int64),
+        "events": ev,
+        "params": state.params,
+        "ring": np.asarray(state.ring, np.float32),
+        "behavior": dict(state.behavior),
+        "dataset_rng": np.asarray(state.dataset_rng, np.uint64),
+        "round_log": round_log_to_arrays(state.round_log),
+        "history": history_to_arrays(state.history),
+    }
+
+
+def engine_state_from_tree(tree: Dict[str, Any]) -> EngineState:
+    """Inverse of ``engine_state_to_tree``."""
+    ev = np.asarray(tree["events"], np.float64).reshape(-1, 2)
+    return EngineState(
+        version=int(tree["meta"]["version"]),
+        now=float(tree["meta"]["now"]),
+        num_events=int(tree["meta"]["num_events"]),
+        base_version=np.asarray(tree["base_version"], np.int64),
+        events=tuple((float(t), int(c)) for t, c in ev),
+        params=tree["params"],
+        ring=np.asarray(tree["ring"], np.float32),
+        behavior=dict(tree["behavior"]),
+        dataset_rng=np.asarray(tree["dataset_rng"], np.uint64),
+        history=history_from_arrays(tree["history"]),
+        round_log=round_log_from_arrays(tree["round_log"]),
+    )
 
 
 @functools.lru_cache(maxsize=64)
@@ -134,7 +218,9 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
                    record_trace: bool = False,
                    rounds_per_launch: int = 8,
                    mesh: Optional[Any] = None,
-                   shard_ring: bool = True) -> SimResult:
+                   shard_ring: bool = True,
+                   init_state: Optional[EngineState] = None,
+                   capture_state: bool = False) -> SimResult:
     """Simulate buffered-async FL, many server rounds per XLA launch.
 
     Same contract as the legacy ``run_async`` plus scenario/trace hooks;
@@ -149,36 +235,82 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
     R * n_padded / model_shards floats per device; ``shard_ring=False``
     replicates the rows instead — same program, parity-test reference);
     no mesh is the single-device path, bit-for-bit unchanged.
+
+    A mesh spanning PROCESSES (``launch/multihost.py``, DESIGN.md §7)
+    runs the same program multi-controller: every process executes this
+    host loop on identical seeds (so per-round metadata agrees without
+    communication), chunk inputs are placed replicated across processes,
+    and the round log is read back from process-local addressable shards
+    — ``jax.device_get`` is never issued on a non-addressable array.
+
+    ``capture_state=True`` attaches an ``EngineState`` snapshot to
+    ``SimResult.final_state``; passing it back as ``init_state`` (same
+    loss/clients/config/seed) resumes the run BIT-identically to the
+    uninterrupted one. ``total_rounds`` always counts from round 0, so a
+    resume runs ``total_rounds - init_state.version`` more rounds.
     """
     n = len(clients)
     k = fl.buffer_size
     beh = resolve_behavior(n, seed, behavior, scenario, latency, trace)
     ring_depth = fl.max_staleness + 1
     chunk_step = _make_chunk_step(loss_fn, fl, mesh)
+    spans = mesh_spans_processes(mesh)
 
-    params = init_params
-    _, ring = init_version_ring(init_params, fl, mesh=mesh,
-                                shard_ring=shard_ring)
+    if init_state is None:
+        params = init_params
+        _, ring = init_version_ring(init_params, fl, mesh=mesh,
+                                    shard_ring=shard_ring)
+        version = 0
+        base_version = np.zeros(n, np.int64)
+        now = 0.0
+        history: List[Dict] = []
+        round_log_prefix: List[Dict] = []
+        num_events = 0
+        # every client starts training at t=0 (availability-gated) from v0
+        events = []
+        for cid in range(n):
+            start = beh.next_start(cid, 0.0)
+            events.append((start + beh.duration(cid, start), cid))
+        heapq.heapify(events)
+    else:
+        if record_trace:
+            raise ValueError(
+                "record_trace cannot resume from a checkpoint: the duration "
+                "draws before the snapshot are not in the restored state")
+        if len(init_state.base_version) != n:
+            raise ValueError(
+                f"checkpoint has {len(init_state.base_version)} clients, "
+                f"this run has {n}")
+        beh.set_state(init_state.behavior)
+        for c, row in zip(clients, init_state.dataset_rng):
+            c.set_rng_state(row)
+        params = init_state.params
+        _, ring = init_version_ring(init_params, fl, mesh=mesh,
+                                    shard_ring=shard_ring,
+                                    rows=init_state.ring)
+        version = init_state.version
+        base_version = np.asarray(init_state.base_version, np.int64).copy()
+        now = init_state.now
+        history = [dict(h) for h in init_state.history]
+        if eval_fn and history and history[-1]["round"] == version \
+                and version % eval_every:
+            # the snapshot run's trailing FORCED eval: off the cadence,
+            # the uninterrupted run never evaluates here — drop it so
+            # the resumed history matches bit-for-bit
+            history.pop()
+        round_log_prefix = [dict(r) for r in init_state.round_log]
+        num_events = init_state.num_events
+        events = [(float(t), int(c)) for t, c in init_state.events]
+        heapq.heapify(events)
     if mesh is not None:
         # params live replicated on the mesh (the flat vector and the
         # K-client axis are re-partitioned inside the round's shard_maps)
-        params = jax.device_put(params, jax.sharding.NamedSharding(
-            mesh, jax.sharding.PartitionSpec()))
-    version = 0
-    base_version = np.zeros(n, np.int64)
-    now = 0.0
-    history: List[Dict] = []
+        params = (put_replicated(params, mesh) if spans
+                  else jax.device_put(params, jax.sharding.NamedSharding(
+                      mesh, jax.sharding.PartitionSpec())))
     pending: List[Dict] = []  # per-round host metadata + device info handles
     event_log: List = []
-    num_events = 0
     num_launches = 0
-
-    # every client starts training at t=0 (availability-gated) from version 0
-    events = []
-    for cid in range(n):
-        start = beh.next_start(cid, 0.0)
-        events.append((start + beh.duration(cid, start), cid))
-    heapq.heapify(events)
 
     def maybe_eval(force=False):
         record_eval(history, eval_fn, version, now, params, eval_every,
@@ -240,7 +372,10 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
                                  for _, cid, _, _ in window], np.float32),
         }
 
-    maybe_eval(force=True)
+    if init_state is None:
+        # a resumed run's round-0 (and any snapshot-round) eval is
+        # already in the restored history
+        maybe_eval(force=True)
     while version < total_rounds:
         # ---- clip the launch chunk to the next eval boundary ------------
         horizon = total_rounds - version
@@ -259,8 +394,7 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
             windows.append(w)
 
         # ---- device: all S rounds in one scanned launch -----------------
-        params, ring, infos = chunk_step(
-            params, ring,
+        chunk_args = (
             np.stack([w["base_slots"] for w in windows]),
             tuple(np.stack([w["batches"][i] for w in windows])
                   for i in range(2)),
@@ -270,6 +404,13 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
             np.asarray([w["tau"] for w in windows], np.float32),
             np.asarray([(version - s + j + 1) % ring_depth
                         for j in range(s)], np.int32))
+        if spans:
+            # multi-controller: every process computed the SAME host
+            # arrays (same seeds drive the event loop), so placing them
+            # replicated across the process-spanning mesh needs no
+            # communication — each process fills its shards locally
+            chunk_args = put_replicated(chunk_args, mesh)
+        params, ring, infos = chunk_step(params, ring, *chunk_args)
         num_launches += 1
         # keep only the round-log metadata; the batch arrays would
         # otherwise pin O(total_rounds * K * batch) host memory
@@ -280,8 +421,18 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
     maybe_eval(force=True)
 
     # ---- single device->host sync for the whole run's round log --------
-    fetched = jax.device_get([p.pop("infos") for p in pending])
-    round_log = []
+    # On one host this is the classic ``jax.device_get``. On a
+    # process-spanning mesh the info arrays are pinned fully replicated
+    # (sharding/specs.info_pspec), so every process assembles the full
+    # log from its own ADDRESSABLE shards — no ``device_get`` of a
+    # non-addressable array, no cross-process collective (DESIGN.md §7).
+    infos_list = [p.pop("infos") for p in pending]
+    if any(isinstance(leaf, jax.Array) and not leaf.is_fully_addressable
+           for info in infos_list for leaf in jax.tree.leaves(info)):
+        fetched = fetch_replicated(infos_list)
+    else:
+        fetched = jax.device_get(infos_list)
+    round_log = list(round_log_prefix)
     for meta, logs in zip(pending, fetched):
         windows = meta["windows"]
         v0 = meta["v_end"] - len(windows)
@@ -298,6 +449,18 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
             })
     trace_out = (EventTrace.from_behavior(beh, event_log)
                  if record_trace else None)
+    final_state = None
+    if capture_state:
+        final_state = EngineState(
+            version=version, now=now, num_events=num_events,
+            base_version=base_version.copy(), events=tuple(sorted(events)),
+            params=fetch_replicated(params),
+            ring=np.asarray(fetch_replicated(ring), np.float32),
+            behavior=beh.get_state(),
+            dataset_rng=np.stack([c.rng_state() for c in clients]),
+            history=[dict(h) for h in history],
+            round_log=[dict(r) for r in round_log])
     return SimResult(history=history, server_rounds=version, sim_time=now,
                      round_log=round_log, num_events=num_events,
-                     num_launches=num_launches, trace=trace_out)
+                     num_launches=num_launches, trace=trace_out,
+                     final_state=final_state)

@@ -24,6 +24,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.utils.rngstate import pack_pcg64, unpack_pcg64
+
 
 # ---------------------------------------------------------------------------
 # latency model (moved from core/simulator.py; core re-exports for compat)
@@ -246,6 +248,44 @@ class ClientBehavior:
         """Recorded draws, in per-client order (see sim.traces)."""
         return {"durations": [list(d) for d in self._durations],
                 "drops": sorted(self._drops)}
+
+    # -- checkpointing (engine resume; DESIGN.md §7) --------------------
+    def get_state(self) -> Dict[str, np.ndarray]:
+        """Snapshot the mutable stream state as plain arrays.
+
+        Captures exactly what a resumed engine needs to continue the
+        per-client streams where they left off: the upload indices, the
+        per-client draw COUNTS (replay-mode behaviors index recorded
+        durations by count), and the raw PCG64 generator states of the
+        duration and dropout streams. The recorded-draw log itself is
+        NOT captured — ``drain_log`` after a resume only covers the
+        post-resume draws, which is why ``run_vectorized`` refuses
+        ``record_trace`` on a resumed run.
+        """
+        return {
+            "upload_idx": self._upload_idx.copy(),
+            "draw_counts": np.asarray([len(d) for d in self._durations],
+                                      np.int64),
+            "dur_rng": pack_pcg64(self._dur_rng),
+            "drop_rng": pack_pcg64(self._drop_rng),
+        }
+
+    def set_state(self, state: Dict[str, np.ndarray]) -> None:
+        """Restore ``get_state``; the next draw of every stream matches
+        what the snapshotted behavior would have drawn next."""
+        n = self.num_clients
+        upload_idx = np.asarray(state["upload_idx"], np.int64)
+        if len(upload_idx) != n:
+            raise ValueError(f"state has {len(upload_idx)} clients, "
+                             f"behavior has {n}")
+        self._upload_idx = upload_idx.copy()
+        self._dur_rng = unpack_pcg64(state["dur_rng"])
+        self._drop_rng = unpack_pcg64(state["drop_rng"])
+        # placeholder entries so replay indexing (len of the draw log)
+        # continues from the recorded count
+        counts = np.asarray(state["draw_counts"], np.int64)
+        self._durations = [[float("nan")] * int(c) for c in counts]
+        self._drops = []
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,122 @@
+"""Multi-host parity worker: 2 CPU processes x 4 forced host devices.
+
+Extends tests/_shard_worker.py to the PROCESS-spanning substrate
+(DESIGN.md §7). The parent test (tests/test_multihost.py) runs this file
+three times:
+
+  --mode single                 one process, 8 forced host devices — the
+                                reference run on a (data=2, model=4) mesh
+  --mode multi --process-id I   two processes, 4 forced host devices
+                                each, joined via jax.distributed into the
+                                SAME logical (data=2, model=4) mesh (one
+                                data row per process, model axis
+                                intra-process)
+
+and pins BIT-identity of the full round log, eval history, and final
+params across >= 2 weighting policies. In multi mode ``jax.device_get``
+is monkeypatched to reject any non-fully-addressable array, proving the
+engine's multi-process path reads the round log exclusively from
+process-local addressable shards. Only the coordinator prints the JSON
+report (the same coordinator-gating the checkpoint path uses).
+"""
+import argparse
+import json
+import os
+import sys
+
+
+def run_parity(mesh, rounds, policies):
+    """One engine run per weighting policy; everything host-comparable."""
+    import jax
+    import numpy as np
+
+    from repro.configs.base import FLConfig
+    from repro.launch.multihost import fetch_replicated
+    from repro.sim.engine import run_vectorized
+    from _shard_worker import _quad_clients, _quad_loss
+
+    def eval_fn(params):
+        w = np.asarray(fetch_replicated(params["w"]), np.float64)
+        return {"wnorm": float(np.sum(w * w))}
+
+    report = {"devices": len(jax.devices()),
+              "process_count": jax.process_count()}
+    for policy in policies:
+        fl = FLConfig(num_clients=6, buffer_size=2, local_steps=2,
+                      local_lr=0.05, batch_size=8, max_staleness=4,
+                      weighting=policy)
+        res = run_vectorized(
+            _quad_loss, {"w": jax.numpy.zeros(4)}, _quad_clients(), fl,
+            total_rounds=rounds, eval_fn=eval_fn, eval_every=2, seed=0,
+            mesh=mesh, capture_state=True)
+        report[policy] = {
+            "round_log": res.round_log,
+            "history": res.history,
+            "final_params": {
+                "w": np.asarray(res.final_state.params["w"],
+                                np.float64).tolist()},
+            "final_ring_row0": np.asarray(res.final_state.ring[0],
+                                          np.float64).tolist(),
+            "num_events": res.num_events,
+            "server_rounds": res.server_rounds,
+        }
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["single", "multi"], required=True)
+    ap.add_argument("--process-id", type=int, default=0)
+    ap.add_argument("--num-processes", type=int, default=2)
+    ap.add_argument("--coordinator", default="127.0.0.1:0")
+    ap.add_argument("--local-devices", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--policies", default="paper,fedbuff")
+    args = ap.parse_args()
+
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    total = args.num_processes * args.local_devices
+    count = total if args.mode == "single" else args.local_devices
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={count}"
+
+    import jax
+
+    if args.mode == "multi":
+        from repro.launch import multihost
+        multihost.initialize(args.coordinator, args.num_processes,
+                             args.process_id)
+        assert jax.process_count() == args.num_processes
+        # the acceptance gate: the multi-process path must never
+        # device_get a non-addressable array — make any attempt fatal
+        real_device_get = jax.device_get
+
+        def guarded_device_get(x):
+            for leaf in jax.tree.leaves(x):
+                if isinstance(leaf, jax.Array) \
+                        and not leaf.is_fully_addressable:
+                    raise AssertionError(
+                        "jax.device_get on a non-addressable array on the "
+                        "multi-process path")
+            return real_device_get(x)
+
+        jax.device_get = guarded_device_get
+        mesh = multihost.make_round_mesh(data=args.num_processes,
+                                         model=args.local_devices)
+        emit = multihost.is_coordinator()
+    else:
+        from repro.launch.mesh import make_round_mesh
+        assert len(jax.devices()) == total, len(jax.devices())
+        mesh = make_round_mesh(data=args.num_processes,
+                               model=args.local_devices)
+        emit = True
+
+    report = run_parity(mesh, args.rounds,
+                        [p for p in args.policies.split(",") if p])
+    if emit:
+        print(json.dumps(report))
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    main()

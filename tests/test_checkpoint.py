@@ -1,0 +1,160 @@
+"""checkpoint/ckpt.py: engine-state save/restore round trip + the
+coordinator gate (DESIGN.md §7).
+
+The headline test: run the vectorized engine T rounds, checkpoint the
+EngineState (version ring + round log + every host RNG stream) to disk
+at T/2 through ``save_checkpoint``/``load_checkpoint``, resume, and pin
+the resumed run BIT-identical to the uninterrupted one — round log,
+history, final params, final ring.
+"""
+import glob
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt, load_checkpoint, save_checkpoint
+from repro.configs.base import FLConfig
+from repro.sim import get_scenario
+from repro.sim.engine import (
+    engine_state_from_tree,
+    engine_state_to_tree,
+    run_vectorized,
+)
+
+from _shard_worker import _quad_clients, _quad_loss
+
+FL = FLConfig(num_clients=6, buffer_size=2, local_steps=2, local_lr=0.05,
+              batch_size=8, max_staleness=4)
+
+
+def _eval(p):
+    return {"wnorm": float(jnp.sum(p["w"] ** 2))}
+
+
+def _run(clients, total_rounds, **kw):
+    return run_vectorized(_quad_loss, {"w": jnp.zeros(4)}, clients, FL,
+                          total_rounds=total_rounds, eval_fn=_eval,
+                          eval_every=2, seed=0, **kw)
+
+
+class TestEngineStateRoundTrip:
+    def test_resume_is_bit_identical(self, tmp_path):
+        """Save at round 4 of 8, restore from DISK, resume: round log,
+        history, params and ring all match the uninterrupted run
+        exactly."""
+        full = _run(_quad_clients(), 8, capture_state=True)
+        half = _run(_quad_clients(), 4, capture_state=True)
+
+        tree = engine_state_to_tree(half.final_state)
+        path = str(tmp_path / "engine.npz")
+        save_checkpoint(path, tree, step=half.final_state.version)
+        loaded, step = load_checkpoint(path, like=tree)
+        assert step == 4
+
+        clients = _quad_clients()  # fresh datasets; RNG restored by state
+        resumed = _run(clients, 8, init_state=engine_state_from_tree(loaded),
+                       capture_state=True)
+        assert resumed.round_log == full.round_log
+        assert resumed.history == full.history
+        assert resumed.num_events == full.num_events
+        assert resumed.server_rounds == 8
+        np.testing.assert_array_equal(np.asarray(resumed.final_state.ring),
+                                      np.asarray(full.final_state.ring))
+        for a, b in zip(jax.tree.leaves(resumed.final_state.params),
+                        jax.tree.leaves(full.final_state.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_resume_off_eval_cadence_is_bit_identical(self):
+        """Checkpoint at a round OFF the eval cadence (3 with
+        eval_every=2): the snapshot's trailing forced eval must not leak
+        an extra history row into the resumed run."""
+        full = _run(_quad_clients(), 8, capture_state=True)
+        half = _run(_quad_clients(), 3, capture_state=True)
+        assert half.history[-1]["round"] == 3  # the forced capture eval
+        state = engine_state_from_tree(engine_state_to_tree(
+            half.final_state))
+        resumed = _run(_quad_clients(), 8, init_state=state,
+                       capture_state=True)
+        assert resumed.history == full.history
+        assert resumed.round_log == full.round_log
+        np.testing.assert_array_equal(np.asarray(resumed.final_state.ring),
+                                      np.asarray(full.final_state.ring))
+
+    def test_resume_with_dropout_scenario(self, tmp_path):
+        """The dropout RNG stream is part of the state: a scenario that
+        consumes it resumes bit-identically too."""
+        sc = get_scenario("dropout-bernoulli")
+
+        def mk():
+            clients, _ = sc.make_dataset(6, samples_per_client=32, seed=0)
+            return clients
+
+        def loss(p, b):
+            x, y = b
+            x = x.reshape(x.shape[0], -1)
+            lp = jax.nn.log_softmax(x @ p["w"])
+            return -jnp.mean(jnp.take_along_axis(
+                lp, y[:, None].astype(jnp.int32), axis=1)), {}
+
+        p0 = {"w": jnp.zeros((784, 10))}
+        full = run_vectorized(loss, p0, mk(), FL, total_rounds=6,
+                              scenario=sc, seed=3, capture_state=True)
+        half = run_vectorized(loss, p0, mk(), FL, total_rounds=3,
+                              scenario=sc, seed=3, capture_state=True)
+        path = str(tmp_path / "engine.npz")
+        tree = engine_state_to_tree(half.final_state)
+        save_checkpoint(path, tree)
+        loaded, _ = load_checkpoint(path, like=tree)
+        resumed = run_vectorized(loss, p0, mk(), FL, total_rounds=6,
+                                 scenario=sc, seed=3,
+                                 init_state=engine_state_from_tree(loaded))
+        assert resumed.round_log == full.round_log
+        assert resumed.num_events == full.num_events
+
+    def test_round_log_survives_in_checkpoint(self):
+        """The serialized state embeds the round log itself (not a
+        digest): restoring reproduces the exact per-round dicts."""
+        half = _run(_quad_clients(), 4, capture_state=True)
+        state = engine_state_from_tree(engine_state_to_tree(half.final_state))
+        assert state.round_log == half.round_log
+        assert state.history == half.history
+        assert state.version == 4
+
+    def test_resume_refuses_record_trace(self):
+        half = _run(_quad_clients(), 2, capture_state=True)
+        with pytest.raises(ValueError, match="record_trace"):
+            _run(_quad_clients(), 4, init_state=half.final_state,
+                 record_trace=True)
+
+    def test_resume_refuses_client_count_mismatch(self):
+        half = _run(_quad_clients(), 2, capture_state=True)
+        with pytest.raises(ValueError, match="clients"):
+            run_vectorized(_quad_loss, {"w": jnp.zeros(4)},
+                           _quad_clients(n=4), FL, total_rounds=4, seed=0,
+                           init_state=half.final_state)
+
+
+class TestCoordinatorGate:
+    def test_non_coordinator_process_writes_nothing(self, tmp_path,
+                                                    monkeypatch):
+        """Every process calls save_checkpoint; only process 0 touches
+        the filesystem (multi-host IO contract, DESIGN.md §7)."""
+        path = str(tmp_path / "ckpt.npz")
+        monkeypatch.setattr(ckpt, "_is_coordinator", lambda: False)
+        save_checkpoint(path, {"w": np.zeros(3)})
+        assert not os.path.exists(path)
+        assert not glob.glob(str(tmp_path / "*"))  # no tmp litter either
+
+        monkeypatch.setattr(ckpt, "_is_coordinator", lambda: True)
+        save_checkpoint(path, {"w": np.zeros(3)})
+        assert os.path.exists(path)
+
+    def test_gate_can_be_disabled_for_private_paths(self, tmp_path,
+                                                    monkeypatch):
+        path = str(tmp_path / "private.npz")
+        monkeypatch.setattr(ckpt, "_is_coordinator", lambda: False)
+        save_checkpoint(path, {"w": np.zeros(3)}, coordinator_only=False)
+        assert os.path.exists(path)

@@ -1,0 +1,90 @@
+"""Multi-host round substrate (DESIGN.md §7): 2 processes x 4 devices
+== 1 process x 8 devices, bit for bit.
+
+Launches tests/_multihost_worker.py three times (one single-process
+reference with 8 forced host devices; two jax.distributed processes with
+4 each, joined over a localhost coordinator) and compares the JSON
+reports for EXACT equality: the full round log, the eval history, and
+the final params/ring across >= 2 weighting policies. The multi-process
+workers also monkeypatch ``jax.device_get`` to reject non-addressable
+arrays, so a pass proves the engine's multi-process round-log fetch uses
+process-local addressable shards only.
+"""
+import json
+import os
+import socket
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+WORKER = os.path.join(ROOT, "tests", "_multihost_worker.py")
+POLICIES = ("paper", "fedbuff")
+
+
+def _worker_env():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)  # the worker pins its own device count
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), os.path.join(ROOT, "tests"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    return env
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def _parse_report(stdout: str) -> dict:
+    return json.loads(stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.multihost
+def test_two_process_mesh_matches_single_process():
+    env = _worker_env()
+    common = ["--rounds", "6", "--policies", ",".join(POLICIES)]
+
+    ref = subprocess.run(
+        [sys.executable, WORKER, "--mode", "single"] + common,
+        capture_output=True, text=True, env=env, timeout=900)
+    assert ref.returncode == 0, ref.stderr[-4000:]
+    ref_report = _parse_report(ref.stdout)
+    assert ref_report["devices"] == 8
+    assert ref_report["process_count"] == 1
+
+    coordinator = f"127.0.0.1:{_free_port()}"
+    procs = [subprocess.Popen(
+        [sys.executable, WORKER, "--mode", "multi",
+         "--process-id", str(i), "--num-processes", "2",
+         "--coordinator", coordinator] + common,
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True, env=env)
+        for i in range(2)]
+    outs = []
+    for p in procs:
+        out, err = p.communicate(timeout=900)
+        assert p.returncode == 0, err[-4000:]
+        outs.append(out)
+
+    # only the coordinator (process 0) emits — the same gate ckpt IO uses
+    assert outs[0].strip(), "coordinator emitted no report"
+    assert not outs[1].strip(), "non-coordinator emitted output"
+    multi_report = _parse_report(outs[0])
+    assert multi_report["devices"] == 8  # global device count
+    assert multi_report["process_count"] == 2
+
+    for policy in POLICIES:
+        ref_p, got_p = ref_report[policy], multi_report[policy]
+        assert got_p["server_rounds"] == ref_p["server_rounds"]
+        assert got_p["num_events"] == ref_p["num_events"]
+        # bit-identity: JSON floats round-trip f32/f64 exactly, so ==
+        # on the parsed structures is bitwise comparison
+        assert got_p["round_log"] == ref_p["round_log"], policy
+        assert got_p["history"] == ref_p["history"], policy
+        assert got_p["final_params"] == ref_p["final_params"], policy
+        assert got_p["final_ring_row0"] == ref_p["final_ring_row0"], policy
