@@ -1,0 +1,123 @@
+"""Serving-loop benchmark: sustained ingest of the always-on controller.
+
+Drives ``core/serving.py`` with the ``paper-fig1`` scenario as an
+in-process traffic generator (the same seeded per-client timelines the
+simulation engines replay) and measures what a deployed aggregation
+endpoint is judged on:
+
+* **uploads/sec** — wall-clock rate at which the controller folds
+  admitted uploads through the jitted streaming ``contribute`` (the
+  serving-side analogue of the engines' events/sec, gated by
+  ``check_regression.py``);
+* **p99 round latency** — sim-time from the first fold of a round to its
+  eq. 5 apply, the quantity the adaptive-K controller steers toward
+  ``target_round_latency``;
+* **admission counters** — queue-full rejections and staleness drops
+  under a deliberately under-provisioned "burst" record, proving the
+  backpressure path costs what it should.
+
+One record per weighting policy (paper / fedbuff / the FedAsync
+discount family) so a policy-specific slowdown in the weighting branch
+shows up here, not in production. Results land in ``BENCH_serve.json``
+(+ ``results/bench/serve.csv``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from benchmarks.bench_sim_engine import logreg_init, logreg_loss
+from benchmarks.common import write_csv
+from repro.configs.base import FLConfig
+from repro.core.serving import ServeConfig, ServingController, serve_stream
+from repro.sim import get_scenario
+from repro.sim.arrivals import TrafficGenerator
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+POLICIES = ("paper", "fedbuff", "fedasync_constant", "fedasync_hinge",
+            "fedasync_poly")
+
+
+def _drive(policy: str, clients, sc, *, num_clients: int, rounds: int,
+           cfg: ServeConfig, max_staleness: int = 12) -> dict:
+    fl = FLConfig(num_clients=num_clients, buffer_size=8,
+                  max_staleness=max_staleness, local_steps=1, batch_size=8,
+                  weighting=policy)
+    params = logreg_init(jax.random.PRNGKey(0))
+    # warmup run compiles contribute/apply outside the measured window
+    warm = ServingController(logreg_loss, params, fl, cfg)
+    serve_stream(warm, TrafficGenerator(clients, sc.behavior(
+        num_clients, seed=0), fl), max_rounds=2)
+
+    ctrl = ServingController(logreg_loss, params, fl, cfg)
+    gen = TrafficGenerator(clients, sc.behavior(num_clients, seed=0), fl)
+    t0 = time.perf_counter()
+    out = serve_stream(ctrl, gen, max_rounds=rounds)
+    dt = time.perf_counter() - t0
+    out["seconds"] = dt
+    out["uploads_per_sec"] = out["folded"] / dt
+    return out
+
+
+def run(num_clients: int = 32, rounds: int = 24, samples_per_client: int = 64,
+        quick: bool = False):
+    if quick:
+        num_clients, rounds = 16, 8
+    sc = get_scenario("paper-fig1")
+    clients, _ = sc.make_dataset(num_clients,
+                                 samples_per_client=samples_per_client,
+                                 seed=0)
+
+    steady = ServeConfig(queue_capacity=64, service_time=0.0,
+                         target_round_latency=2.0, k_min=2, k_max=64,
+                         adapt_every=4)
+    rows, record = [], {}
+    for policy in POLICIES:
+        r = _drive(policy, clients, sc, num_clients=num_clients,
+                   rounds=rounds, cfg=steady)
+        record[policy] = r
+        rows.append([policy, num_clients, r["rounds"], r["folded"],
+                     round(r["seconds"], 3), round(r["uploads_per_sec"], 1),
+                     round(r["round_latency_p99"], 3), r["k"]])
+        print(f"  {policy:18s} {r['folded']} uploads in {r['seconds']:.2f}s "
+              f"-> {r['uploads_per_sec']:.1f} uploads/s, "
+              f"p99 round latency {r['round_latency_p99']:.2f}s "
+              f"(sim), K -> {r['k']}")
+
+    # under-provisioned endpoint: service slower than arrivals, tiny queue
+    burst_cfg = ServeConfig(queue_capacity=4, service_time=0.4,
+                            adapt_every=0, retry_after_min=0.2)
+    burst = _drive("paper", clients, sc, num_clients=num_clients,
+                   rounds=max(2, rounds // 4), cfg=burst_cfg,
+                   max_staleness=4)
+    print(f"  burst (under-provisioned): "
+          f"{burst['rejected_queue_full']} queue-full rejections, "
+          f"{burst['dropped_stale_ingress'] + burst['dropped_stale_queue']} "
+          f"staleness drops, queue depth max {burst['queue_depth_max']}")
+
+    out = {
+        "bench": "serve",
+        "backend": jax.default_backend(),
+        "num_clients": num_clients, "rounds": rounds,
+        "scenario": sc.name,
+        "policies": record,
+        "burst": burst,
+        "uploads_per_sec": record["paper"]["uploads_per_sec"],
+        "round_latency_p99": record["paper"]["round_latency_p99"],
+    }
+    path = os.path.join(ROOT, "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    write_csv("serve.csv",
+              ["policy", "num_clients", "rounds", "uploads", "seconds",
+               "uploads_per_sec", "round_latency_p99", "k_final"], rows)
+    print(f"  wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

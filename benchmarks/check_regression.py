@@ -1,7 +1,8 @@
 """Nightly benchmark regression gate.
 
 Compares freshly produced ``BENCH_sim_engine.json`` /
-``BENCH_shard_scale.json`` against the COMMITTED baselines (``git show
+``BENCH_shard_scale.json`` / ``BENCH_serve.json`` against the COMMITTED
+baselines (``git show
 <ref>:<file>``) and exits non-zero on a real regression, so the nightly
 lane goes red instead of silently uploading artifacts:
 
@@ -85,6 +86,17 @@ def shard_scale_metrics(doc: dict) -> Dict[str, float]:
     return out
 
 
+def serve_metrics(doc: dict) -> Dict[str, float]:
+    """Sustained fold throughput per weighting policy (wall-clock; same
+    -20% gate as the engines' events/sec figures)."""
+    out = {}
+    for policy, rec in doc.get("policies", {}).items():
+        v = rec.get("uploads_per_sec")
+        if v is not None:
+            out[f"serve/{policy}/uploads_per_sec"] = float(v)
+    return out
+
+
 def shard_scale_launches(doc: dict) -> Dict[str, int]:
     out = {}
     for d, rec in doc.get("records", {}).items():
@@ -130,6 +142,7 @@ def main() -> None:
         ("BENCH_sim_engine.json", sim_engine_metrics, False),
         ("BENCH_shard_scale.json", shard_scale_metrics, False),
         ("BENCH_shard_scale.json", shard_scale_launches, True),
+        ("BENCH_serve.json", serve_metrics, False),
     )
     failures: List[str] = []
     missing = 0

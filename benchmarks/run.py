@@ -6,6 +6,7 @@
   server      CA-AFL server-pass scalability vs FedBuff
   sim_engine  simulator throughput: legacy event loop vs vectorized engine
   shard_scale sharded round substrate: device-count sweep (forced-host CPU)
+  serve       always-on serving loop: sustained uploads/sec, p99 round latency
   roofline    §Roofline table from the dry-run artifacts (analytic terms)
 
 ``python -m benchmarks.run`` runs everything in quick mode (CPU-friendly);
@@ -19,7 +20,7 @@ import time
 
 
 KNOWN = ("fig1", "ablation", "buffer_k", "kernels", "server", "sim_engine",
-         "shard_scale", "roofline")
+         "shard_scale", "serve", "roofline")
 
 
 def main() -> None:
@@ -58,6 +59,10 @@ def main() -> None:
         from benchmarks import bench_shard_scale
         jobs.append(("shard_scale (mesh-sharded round substrate)",
                      lambda: bench_shard_scale.run(quick=quick)))
+    if args.only in (None, "serve"):
+        from benchmarks import bench_serve
+        jobs.append(("serve (always-on serving loop)",
+                     lambda: bench_serve.run(quick=quick)))
     if args.only in (None, "roofline"):
         from benchmarks import roofline
         jobs.append(("roofline", roofline.main))

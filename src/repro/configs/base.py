@@ -143,10 +143,13 @@ class FLConfig:
     global_lr: float = 1.0  # eta_g
     batch_size: int = 32
     clients_per_round: int = 0  # sync FedAvg participation; 0 = all N
-    weighting: str = "paper"  # paper | multiplicative | fedbuff | polynomial | fedasync
+    weighting: str = "paper"  # paper | multiplicative | fedbuff | polynomial
+    # | fedasync | fedasync_{constant,hinge,poly} (core/weighting.POLICIES)
     normalize: str = "mean"  # mean | none
     s_min: float = 1e-3  # floor on S_i for the paper's division (numerics)
     poly_a: float = 0.5  # exponent for the polynomial staleness discount
+    hinge_a: float = 10.0  # fedasync_hinge slope (FLGo default)
+    hinge_b: float = 6.0  # fedasync_hinge knee: s(tau)=1 while tau <= b
     staleness_mode: str = "model_diff"  # model_diff (eq.3) | rounds
     max_staleness: int = 32  # ring-buffer depth for version tracking
     seed: int = 0

@@ -15,6 +15,13 @@ from repro.core.round_body import (  # noqa: F401
     make_streaming_round_body,
 )
 from repro.core.server import AsyncServer, SyncServer  # noqa: F401
+from repro.core.serving import (  # noqa: F401
+    Admission,
+    ServeConfig,
+    ServingController,
+    Upload,
+    serve_stream,
+)
 from repro.core.server_pass import (  # noqa: F401
     FlatSpec,
     ShardedFlatSpec,
@@ -36,8 +43,10 @@ from repro.core.simulator import (  # noqa: F401
     run_vectorized,
 )
 from repro.core.weighting import (  # noqa: F401
+    FEDASYNC_POLICIES,
     POLICIES,
     contribution_weights,
+    fedasync_discount,
     staleness_degree,
     statistical_effect,
 )

@@ -36,15 +36,26 @@ class UpdateBuffer:
 
 
 class VersionHistory:
-    """Ring of recent global-model snapshots for exact eq.-3 distances."""
+    """Ring of recent global-model snapshots for exact eq.-3 distances.
+
+    Holds AT MOST ``max_versions`` snapshots: after ``put(version)`` the
+    ring spans ``[version - max_versions + 1, version]``. Callers that
+    need bases up to ``max_staleness`` rounds old must size the ring
+    ``max_staleness + 1`` (current + that many predecessors).
+    """
 
     def __init__(self, max_versions: int):
+        if max_versions < 1:
+            raise ValueError("max_versions must be >= 1")
         self.max_versions = int(max_versions)
         self._snaps: Dict[int, Any] = {}
 
     def put(self, version: int, params: Any) -> None:
         self._snaps[version] = params
-        floor = version - self.max_versions
+        # keep the newest max_versions entries: floor at
+        # version - max_versions + 1 (the old "- max_versions" floor
+        # silently retained max_versions + 1 snapshots)
+        floor = version - self.max_versions + 1
         for v in [v for v in self._snaps if v < floor]:
             del self._snaps[v]
 

@@ -302,6 +302,7 @@ def make_streaming_round_body(loss_fn: Callable,
         v = contribution_weights(fl.weighting, p, s,
                                  tau[None].astype(jnp.float32),
                                  s_min=fl.s_min, poly_a=fl.poly_a,
+                                 hinge_a=fl.hinge_a, hinge_b=fl.hinge_b,
                                  normalize="none")[0]
         new_accum = jax.tree.map(
             lambda a, dl: a + (v * dl.astype(jnp.float32)).astype(a.dtype),

@@ -59,7 +59,14 @@ def mask_update(round_key, update: Any, client_id: int,
 
 
 def secure_sum(masked_updates: List[Any]) -> Any:
-    """Server-side sum of masked updates == sum of raw updates."""
+    """Server-side sum of masked updates == sum of raw updates.
+
+    An empty cohort is a protocol error (the pairwise masks only cancel
+    inside one complete K-buffer), so it raises instead of IndexError.
+    """
+    if not masked_updates:
+        raise ValueError("secure_sum needs at least one masked update "
+                         "(the buffer drained an empty cohort)")
     out = masked_updates[0]
     for u in masked_updates[1:]:
         out = tree_add(out, u)

@@ -38,7 +38,9 @@ class AsyncServer:
         self.params = init_params
         self.version = 0
         self.buffer = UpdateBuffer(fl.buffer_size)
-        self.history = VersionHistory(fl.max_staleness)
+        # valid bases span version - max_staleness .. version: the current
+        # snapshot plus max_staleness predecessors
+        self.history = VersionHistory(fl.max_staleness + 1)
         self.history.put(0, init_params)
         self._pass = make_server_pass(fl, fresh_loss_fn)
         self._fresh_loss = (None if fresh_loss_fn is None

@@ -261,6 +261,7 @@ def apply_server_round(x: jnp.ndarray, bases: jnp.ndarray,
         upd, dists, w = _ops.server_update(
             x, bases, deltas, p, taus, mask, policy=fl.weighting,
             eta_g=fl.global_lr, s_min=fl.s_min, poly_a=fl.poly_a,
+            hinge_a=fl.hinge_a, hinge_b=fl.hinge_b,
             normalize=fl.normalize, block_n=block, interpret=interpret)
         s = staleness_degree(dists, arrival_mask=mask)
         new_x = x - upd
@@ -298,7 +299,8 @@ def _weight_and_reduce(dists, deltas, p, taus, mask, fl: FLConfig, *,
     """
     s = staleness_degree(dists, arrival_mask=mask)
     w = contribution_weights(fl.weighting, p, s, taus, s_min=fl.s_min,
-                             poly_a=fl.poly_a, normalize=fl.normalize,
+                             poly_a=fl.poly_a, hinge_a=fl.hinge_a,
+                             hinge_b=fl.hinge_b, normalize=fl.normalize,
                              arrival_mask=mask)
     k_eff = jnp.maximum(jnp.sum(mask), 1.0)
     w_scaled = w * (fl.global_lr / k_eff)

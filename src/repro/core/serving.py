@@ -1,0 +1,333 @@
+"""Always-on FL serving controller (DESIGN.md §8).
+
+Everything else in the repo is run-to-completion simulation; this module
+is the first consumer of the round substrate as a *service*. It wraps
+``core/round_body.py::make_streaming_round_body`` — the O(1)-state online
+form of eq. 5 — in the three pieces a long-running aggregation endpoint
+actually needs:
+
+* **Admission control.** Uploads land in a bounded ingress queue. A full
+  queue rejects with a ``retry_after`` backoff hint (the client re-offers
+  the SAME update later, staler); queued updates whose staleness outgrows
+  ``FLConfig.max_staleness`` are evicted oldest-first (their eq. 3 base
+  fell out of the version ring, so folding them would be unweightable).
+  Every rejection reason has its own counter — nothing is dropped
+  silently.
+
+* **Adaptive buffer size K.** The time to gather a K-buffer is ~K/λ for
+  arrival rate λ, so a fixed K couples round cadence to traffic. The
+  controller EWMA-estimates λ from admitted inter-arrival gaps and steers
+  K toward ``K* = λ · target_round_latency`` with a damped proportional
+  step every ``adapt_every`` rounds. The streaming accumulator makes K a
+  pure control decision: the apply is triggered by a host-side count, no
+  device state is shaped by K (the v-buffer is padded to ``k_max`` so the
+  jitted apply compiles once).
+
+* **Telemetry.** Sustained uploads folded/sec, round-latency quantiles
+  (p50/p99), queue-depth high-water mark, per-reason rejection counts,
+  and the K trajectory — the numbers ``benchmarks/bench_serve.py`` gates
+  on.
+
+Time is injected by the caller (``now``): the driver below runs on the
+sim/ scenario clock so tests and CI are deterministic, while a real
+deployment would pass wall-clock. Service cost is modeled by
+``service_time`` (sim-time to fold one upload); with arrival rate above
+``1/service_time`` the queue fills and backpressure engages — exactly
+the regime the burst tests pin.
+
+The weighting inherits the FULL policy zoo of ``core/weighting.py``,
+including the FedAsync staleness-discount family
+(``fedasync_constant`` / ``fedasync_hinge`` / ``fedasync_poly``), because
+the streaming round body runs ``contribution_weights`` verbatim. Parity
+of the served aggregate against the exact ``apply_server_round`` path is
+pinned in tests/test_serving.py for every policy.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable, Deque, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core.round_body import make_streaming_round_body
+
+# admission outcomes (Admission.reason values)
+ADMITTED = "admitted"
+REJECT_QUEUE_FULL = "queue_full"
+DROP_MAX_STALENESS = "max_staleness"
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Knobs of the serving loop (separate from the FL maths in FLConfig)."""
+
+    queue_capacity: int = 64  # bounded ingress queue (admission control)
+    service_time: float = 0.0  # sim-time to fold ONE upload into the accum
+    target_round_latency: float = 2.0  # cadence the adaptive K steers toward
+    k_min: int = 2  # adaptive-K clamp (floor keeps secure-agg viable)
+    k_max: int = 64  # also the padded v-buffer length (one compile)
+    adapt_every: int = 4  # rounds between K adjustments; 0 = fixed K
+    adapt_gain: float = 0.5  # damping toward K* = lambda_hat * target
+    arrival_ewma: float = 0.2  # EWMA factor of the inter-arrival estimate
+    retry_after_min: float = 0.1  # floor on the advertised backoff
+
+
+class Upload(NamedTuple):
+    """One client upload as the ingress queue holds it.
+
+    The streaming mapping folds the local training server-side (the
+    distributed-client entry shape), so the message carries the client's
+    batches rather than a precomputed delta; ``base_version`` is the
+    global version the client pulled, from which the controller derives
+    staleness at FOLD time (it grows while the upload queues).
+    """
+
+    client_id: int
+    base_version: int
+    data_size: float
+    batch: Any  # (M, b, ...) stacked local-step batches
+    probe: Any  # (bp, ...) eq.-4 fresh-loss probe batch
+    sent_at: float  # sim-time the upload arrived at the endpoint
+
+
+class Admission(NamedTuple):
+    accepted: bool
+    reason: str  # ADMITTED / REJECT_QUEUE_FULL / DROP_MAX_STALENESS
+    retry_after: float  # backoff hint, > 0 only for REJECT_QUEUE_FULL
+
+
+class ServingController:
+    """Admission control + adaptive-K state machine over the streaming round.
+
+    Host-side object: the queue, counters, and the K decision live on the
+    host; the two jitted programs (``contribute`` folding one upload,
+    ``apply`` completing eq. 5) each compile exactly once because every
+    device-side shape — params, accumulator, the (k_max,) v-buffer, the
+    (max_staleness,) update-norm ring — is independent of the current K.
+    """
+
+    def __init__(self, loss_fn: Callable, init_params: Any, fl: FLConfig,
+                 cfg: ServeConfig = ServeConfig()):
+        if cfg.k_min < 1 or cfg.k_max < cfg.k_min:
+            raise ValueError(f"need 1 <= k_min <= k_max, got "
+                             f"[{cfg.k_min}, {cfg.k_max}]")
+        if cfg.queue_capacity < 1:
+            raise ValueError("queue_capacity must be >= 1")
+        self.fl = fl
+        self.cfg = cfg
+        body = make_streaming_round_body(loss_fn, fl)
+
+        def contribute_step(params, accum, ring, v_buf, count, batch, probe,
+                            size, tau):
+            accum, v, fresh = body.contribute(params, accum, ring, batch,
+                                              probe, size, tau)
+            return accum, v_buf.at[count].set(v), v, fresh
+
+        self._contribute = jax.jit(contribute_step)
+        self._apply = jax.jit(body.apply)
+
+        acc_dtype = jnp.dtype(fl.accum_dtype)
+        self.params = init_params
+        self.accum = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, acc_dtype), init_params)
+        self.v_buf = jnp.zeros((cfg.k_max,), jnp.float32)
+        self.update_norm_ring = jnp.zeros((fl.max_staleness,), jnp.float32)
+        self.count = 0  # uploads folded into the open round
+        self.version = 0  # global rounds applied
+        self.k = int(np.clip(fl.buffer_size, cfg.k_min, cfg.k_max))
+
+        self.queue: Deque[Upload] = collections.deque()
+        self.busy_until = 0.0  # service-model clock (sim-time)
+        self.counters: Dict[str, int] = {
+            "admitted": 0,
+            "rejected_queue_full": 0,
+            "dropped_stale_ingress": 0,
+            "dropped_stale_queue": 0,
+            "folded": 0,
+            "rounds": 0,
+        }
+        self.round_latencies: List[float] = []
+        self.round_times: List[float] = []  # apply completion times
+        self.k_history: List[Tuple[int, int]] = [(0, self.k)]
+        self.queue_depth_max = 0
+        self._round_open_at: Optional[float] = None
+        self._interarrival: Optional[float] = None
+        self._last_arrival: Optional[float] = None
+
+    # -- admission control ---------------------------------------------
+    def staleness(self, upload: Upload) -> int:
+        return self.version - upload.base_version
+
+    def _evict_stale(self) -> None:
+        """Drop-oldest: head entries whose base outgrew the version ring."""
+        while self.queue and self.staleness(self.queue[0]) > \
+                self.fl.max_staleness:
+            self.queue.popleft()
+            self.counters["dropped_stale_queue"] += 1
+
+    def _retry_after(self) -> float:
+        """Backoff hint: the time to drain the current queue at the modeled
+        service rate (floored so zero-cost services still spread retries)."""
+        return max(self.cfg.retry_after_min,
+                   len(self.queue) * self.cfg.service_time)
+
+    def offer(self, upload: Upload, now: float) -> Admission:
+        """Admit one upload into the bounded ingress queue."""
+        self._evict_stale()
+        if self.staleness(upload) > self.fl.max_staleness:
+            self.counters["dropped_stale_ingress"] += 1
+            return Admission(False, DROP_MAX_STALENESS, 0.0)
+        if len(self.queue) >= self.cfg.queue_capacity:
+            self.counters["rejected_queue_full"] += 1
+            return Admission(False, REJECT_QUEUE_FULL, self._retry_after())
+        self.queue.append(upload)
+        self.counters["admitted"] += 1
+        self.queue_depth_max = max(self.queue_depth_max, len(self.queue))
+        self._observe_arrival(now)
+        return Admission(True, ADMITTED, 0.0)
+
+    def _observe_arrival(self, now: float) -> None:
+        if self._last_arrival is not None:
+            gap = max(now - self._last_arrival, 1e-9)
+            a = self.cfg.arrival_ewma
+            self._interarrival = (gap if self._interarrival is None
+                                  else (1.0 - a) * self._interarrival + a * gap)
+        self._last_arrival = now
+
+    def arrival_rate(self) -> float:
+        """EWMA admitted uploads per sim-second (0 before two arrivals)."""
+        return 0.0 if not self._interarrival else 1.0 / self._interarrival
+
+    # -- service + aggregation -----------------------------------------
+    def pump(self, now: float) -> int:
+        """Fold queued uploads whose service completes by ``now``; run the
+        eq. 5 apply whenever the open round reaches K. Returns the number
+        of rounds applied."""
+        rounds = 0
+        while True:
+            if self.count >= self.k:  # also catches K adapted downward
+                self._apply_round(max(self.busy_until, now))
+                rounds += 1
+                continue
+            if not self.queue:
+                break
+            done = max(self.busy_until, now if self.cfg.service_time == 0.0
+                       else self.queue[0].sent_at) + self.cfg.service_time
+            if self.cfg.service_time > 0.0 and done > now:
+                break  # the server is still busy; leave the rest queued
+            upload = self.queue.popleft()
+            tau = self.staleness(upload)
+            if tau > self.fl.max_staleness:  # out-aged while queued
+                self.counters["dropped_stale_queue"] += 1
+                continue
+            self.accum, self.v_buf, _, _ = self._contribute(
+                self.params, self.accum, self.update_norm_ring, self.v_buf,
+                jnp.int32(self.count), upload.batch, upload.probe,
+                jnp.float32(upload.data_size), jnp.int32(tau))
+            self.busy_until = done
+            if self.count == 0:
+                self._round_open_at = upload.sent_at
+            self.count += 1
+            self.counters["folded"] += 1
+        return rounds
+
+    def _apply_round(self, t_done: float) -> None:
+        self.params, self.update_norm_ring = self._apply(
+            self.params, self.accum, self.v_buf, jnp.int32(self.count),
+            self.update_norm_ring)
+        self.accum = jax.tree.map(jnp.zeros_like, self.accum)
+        self.v_buf = jnp.zeros_like(self.v_buf)
+        self.count = 0
+        self.version += 1
+        self.counters["rounds"] += 1
+        open_at = self._round_open_at if self._round_open_at is not None \
+            else t_done
+        self.round_latencies.append(t_done - open_at)
+        self.round_times.append(t_done)
+        self._round_open_at = None
+        if self.cfg.adapt_every and \
+                self.counters["rounds"] % self.cfg.adapt_every == 0:
+            self._adapt_k()
+
+    def _adapt_k(self) -> None:
+        """Damped proportional step toward K* = lambda_hat * target."""
+        lam = self.arrival_rate()
+        if lam <= 0.0:
+            return
+        k_star = lam * self.cfg.target_round_latency
+        g = self.cfg.adapt_gain
+        new_k = int(np.clip(round((1.0 - g) * self.k + g * k_star),
+                            self.cfg.k_min, self.cfg.k_max))
+        if new_k != self.k:
+            self.k = new_k
+            self.k_history.append((self.version, self.k))
+
+    # -- telemetry -------------------------------------------------------
+    def metrics(self) -> Dict[str, Any]:
+        lat = sorted(self.round_latencies)
+
+        def pct(p: float) -> float:
+            if not lat:
+                return float("nan")
+            return lat[min(len(lat) - 1, int(p * len(lat)))]
+
+        cadence = (np.diff(self.round_times).tolist()
+                   if len(self.round_times) > 1 else [])
+        return {
+            **self.counters,
+            "k": self.k,
+            "k_history": list(self.k_history),
+            "version": self.version,
+            "arrival_rate": self.arrival_rate(),
+            "round_latency_p50": pct(0.50),
+            "round_latency_p99": pct(0.99),
+            "round_cadence_mean": (float(np.mean(cadence)) if cadence
+                                   else float("nan")),
+            "queue_depth_now": len(self.queue),
+            "queue_depth_max": self.queue_depth_max,
+        }
+
+
+def serve_stream(controller: ServingController, gen,
+                 *, max_rounds: Optional[int] = None,
+                 max_events: Optional[int] = None,
+                 max_time: Optional[float] = None) -> Dict[str, Any]:
+    """Drive the controller from a continuous arrival stream.
+
+    ``gen`` is a ``sim.arrivals.TrafficGenerator`` (or anything with its
+    ``pop`` / ``realize`` / ``settle`` protocol). Events are consumed in
+    global (time, client) order until one of the bounds trips; the final
+    partial buffer is left unapplied (a service has no "end of run").
+    Returns ``controller.metrics()`` plus the event/time bookkeeping.
+    """
+    if max_rounds is None and max_events is None and max_time is None:
+        raise ValueError("need at least one of max_rounds / max_events / "
+                         "max_time")
+    events = 0
+    now = 0.0
+    while not gen.empty():
+        if max_rounds is not None and controller.version >= max_rounds:
+            break
+        if max_events is not None and events >= max_events:
+            break
+        t, cid = gen.pop()
+        if max_time is not None and t > max_time:
+            break
+        now = t
+        events += 1
+        upload = gen.realize(cid, t, controller.version)
+        if upload is None:  # lost in transit (scenario dropout)
+            continue
+        adm = controller.offer(upload, t)
+        controller.pump(t)
+        gen.settle(cid, t, adm, controller.version, upload)
+    out = controller.metrics()
+    out["events"] = events
+    out["sim_time"] = now
+    out["lost_in_transit"] = gen.lost
+    out["retries_scheduled"] = gen.retries
+    return out

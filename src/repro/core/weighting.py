@@ -12,6 +12,14 @@ Policies (see DESIGN.md §1.1 for the faithfulness discussion):
                                                          paper quotes, a=0.5)
   fedasync       : alias of polynomial (per-update mixing weight)
 
+FedAsync staleness-discount family (Xie et al., arXiv:1903.03934; the
+``s(tau)`` flags FLGo ships) — pure functions of the round staleness, so
+they are exact under every deployment mapping including the streaming
+serving path (DESIGN.md §8):
+  fedasync_constant : w_i = 1
+  fedasync_hinge    : w_i = 1 if tau <= b else 1 / (a * (tau - b))
+  fedasync_poly     : w_i = (1 + tau_i)^-a  (== polynomial)
+
 ``normalize="mean"`` rescales weights to mean 1 so eq. 5's (1/K)*sum keeps
 the global-update magnitude decoupled from raw loss scale; ``"none"`` is the
 strictly literal form. All functions are jit-safe.
@@ -20,7 +28,32 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-POLICIES = ("paper", "multiplicative", "fedbuff", "polynomial", "fedasync")
+FEDASYNC_POLICIES = ("fedasync_constant", "fedasync_hinge", "fedasync_poly")
+POLICIES = ("paper", "multiplicative", "fedbuff", "polynomial",
+            "fedasync") + FEDASYNC_POLICIES
+
+
+def fedasync_discount(flag: str, tau_rounds: jnp.ndarray, *,
+                      hinge_a: float = 10.0, hinge_b: float = 6.0,
+                      poly_a: float = 0.5) -> jnp.ndarray:
+    """FedAsync's ``s(tau)`` staleness discount, flags per FLGo.
+
+    ``flag`` is one of ``constant`` / ``hinge`` / ``poly``; ``tau_rounds``
+    is (K,) round staleness. The hinge denominator is floored so the
+    boundary tau == b (where the discontinuous branch would divide by
+    zero before ``where`` selects the constant side) stays finite.
+    """
+    tau = tau_rounds.astype(jnp.float32)
+    if flag == "constant":
+        return jnp.ones_like(tau)
+    if flag == "hinge":
+        return jnp.where(
+            tau <= hinge_b, 1.0,
+            1.0 / jnp.maximum(hinge_a * (tau - hinge_b), 1e-12))
+    if flag == "poly":
+        return (1.0 + tau) ** (-poly_a)
+    raise ValueError(f"unknown fedasync flag {flag!r}; "
+                     "valid: constant, hinge, poly")
 
 
 def staleness_degree(sq_dists: jnp.ndarray, eps: float = 1e-12, *,
@@ -70,6 +103,8 @@ def contribution_weights(policy: str,
                          *,
                          s_min: float = 1e-3,
                          poly_a: float = 0.5,
+                         hinge_a: float = 10.0,
+                         hinge_b: float = 6.0,
                          normalize: str = "mean",
                          arrival_mask: jnp.ndarray | None = None) -> jnp.ndarray:
     """Per-update aggregation weights w_i (before the 1/K of eq. 5).
@@ -86,6 +121,10 @@ def contribution_weights(policy: str,
         w = p_stat * s_stale
     elif policy == "fedbuff":
         w = jnp.ones_like(p_stat)
+    elif policy in FEDASYNC_POLICIES:
+        w = fedasync_discount(policy.split("_", 1)[1], tau_rounds,
+                              hinge_a=hinge_a, hinge_b=hinge_b,
+                              poly_a=poly_a)
     else:  # polynomial / fedasync
         w = (1.0 + tau_rounds.astype(jnp.float32)) ** (-poly_a)
     w = w.astype(jnp.float32)

@@ -61,7 +61,8 @@ def weighted_sum_pallas(deltas: jnp.ndarray, weights: jnp.ndarray,
 def _fused_server_kernel(x_ref, b_ref, d_ref, p_ref, tau_ref, m_ref,
                          upd_ref, dist_ref, w_ref, *,
                          policy: str, eta_g: float, s_min: float,
-                         poly_a: float, normalize: str, eps: float):
+                         poly_a: float, hinge_a: float, hinge_b: float,
+                         normalize: str, eps: float):
     """Whole eq. 3 + weighting + eq. 5 server reduction in ONE kernel.
 
     Two-phase sequential grid (ph, i) with ph in {0, 1}, i over N-tiles:
@@ -105,9 +106,13 @@ def _fused_server_kernel(x_ref, b_ref, d_ref, p_ref, tau_ref, m_ref,
             w = p / jnp.maximum(s, s_min)
         elif policy == "multiplicative":
             w = p * s
-        elif policy == "fedbuff":
+        elif policy in ("fedbuff", "fedasync_constant"):
             w = jnp.ones_like(p)
-        else:  # polynomial / fedasync
+        elif policy == "fedasync_hinge":
+            t = tau_ref[...]
+            w = jnp.where(t <= hinge_b, jnp.ones_like(t),
+                          1.0 / jnp.maximum(hinge_a * (t - hinge_b), 1e-12))
+        else:  # polynomial / fedasync / fedasync_poly
             w = (1.0 + tau_ref[...]) ** (-poly_a)
         mask = m_ref[...]
         w = w * mask
@@ -128,6 +133,7 @@ def fused_server_pallas(x: jnp.ndarray, bases: jnp.ndarray,
                         taus: jnp.ndarray, arrival_mask: jnp.ndarray,
                         *, policy: str = "paper", eta_g: float = 1.0,
                         s_min: float = 1e-3, poly_a: float = 0.5,
+                        hinge_a: float = 10.0, hinge_b: float = 6.0,
                         normalize: str = "mean", eps: float = 1e-12,
                         block_n: int = DEFAULT_BLOCK_N,
                         interpret: bool = False):
@@ -138,7 +144,8 @@ def fused_server_pallas(x: jnp.ndarray, bases: jnp.ndarray,
     scale. N % block_n == 0 (use the ops wrapper for padding).
     """
     if policy not in ("paper", "multiplicative", "fedbuff", "polynomial",
-                      "fedasync"):
+                      "fedasync", "fedasync_constant", "fedasync_hinge",
+                      "fedasync_poly"):
         raise ValueError(f"unknown policy {policy!r}")
     if normalize not in ("mean", "none"):
         raise ValueError(f"unknown normalize {normalize!r}")
@@ -150,7 +157,8 @@ def fused_server_pallas(x: jnp.ndarray, bases: jnp.ndarray,
     col2 = lambda a: a.astype(jnp.float32).reshape(k, 1)
     kernel = functools.partial(
         _fused_server_kernel, policy=policy, eta_g=eta_g, s_min=s_min,
-        poly_a=poly_a, normalize=normalize, eps=eps)
+        poly_a=poly_a, hinge_a=hinge_a, hinge_b=hinge_b,
+        normalize=normalize, eps=eps)
     upd, dists, w = pl.pallas_call(
         kernel,
         grid=grid,

@@ -45,6 +45,7 @@ def weighted_sum(deltas, weights, use_kernel: bool = True, interpret: bool = Tru
 def server_update(x, bases, deltas, p_stat, taus, arrival_mask=None, *,
                   policy: str = "paper", eta_g: float = 1.0,
                   s_min: float = 1e-3, poly_a: float = 0.5,
+                  hinge_a: float = 10.0, hinge_b: float = 6.0,
                   normalize: str = "mean", block_n: int = 0,
                   interpret: bool = False):
     """Fused single-launch server pass (eq. 3 + weighting + eq. 5).
@@ -68,8 +69,9 @@ def server_update(x, bases, deltas, p_stat, taus, arrival_mask=None, *,
         deltas = jnp.pad(deltas, ((0, 0), (0, npad - n)))
     upd, dists, w = _k.fused_server_pallas(
         x, bases, deltas, p_stat, taus, arrival_mask, policy=policy,
-        eta_g=eta_g, s_min=s_min, poly_a=poly_a, normalize=normalize,
-        block_n=block, interpret=interpret)
+        eta_g=eta_g, s_min=s_min, poly_a=poly_a, hinge_a=hinge_a,
+        hinge_b=hinge_b, normalize=normalize, block_n=block,
+        interpret=interpret)
     return upd[:n], dists, w
 
 

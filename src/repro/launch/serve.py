@@ -38,9 +38,11 @@ def main() -> None:
     model = build_model(cfg)
     mesh = make_host_mesh()
     rng = np.random.default_rng(0)
-    key = jax.random.PRNGKey(0)
+    # split BEFORE init: the sampling stream must never reuse the key the
+    # parameter init consumed
+    key, init_key = jax.random.split(jax.random.PRNGKey(0))
 
-    params = model.init(key)
+    params = model.init(init_key)
     cache_len = args.prompt_len + args.gen
     cache = model.init_cache(args.batch, cache_len)
     if cfg.is_encdec:

@@ -8,6 +8,7 @@
 ``legacy``    — the original per-event heapq loop (parity reference).
 """
 from repro.sim import metrics  # noqa: F401
+from repro.sim.arrivals import TrafficGenerator  # noqa: F401
 from repro.sim.base import (  # noqa: F401
     SimResult,
     make_batches,

@@ -49,6 +49,19 @@ class TestBuffer:
         assert [e.client_id for e in first] == [0, 1]
         assert len(buf) == 1  # overflow entry retained
 
+    def test_version_history_bound_is_exact(self):
+        """put() must retain AT MOST max_versions snapshots (the old
+        pruning floor kept max_versions + 1) and exactly the newest
+        window [version - max_versions + 1, version]."""
+        from repro.core.buffer import VersionHistory
+        hist = VersionHistory(3)
+        for v in range(10):
+            hist.put(v, {"w": jnp.full(2, float(v))})
+            assert len(hist._snaps) <= 3
+        assert sorted(hist._snaps) == [7, 8, 9]
+        assert hist.oldest() == 7
+        assert 6 not in hist and 9 in hist
+
 
 class TestAsyncServer:
     def _server(self, weighting="paper", k=2):

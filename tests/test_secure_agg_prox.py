@@ -49,6 +49,11 @@ class TestSecureAggregation:
                                    tree_flatten_to_vector(expect),
                                    rtol=1e-5, atol=1e-5)
 
+    def test_empty_cohort_raises_value_error(self):
+        """An empty buffer drain is a protocol error, not an IndexError."""
+        with pytest.raises(ValueError, match="at least one"):
+            secure_sum([])
+
 
 class TestFedProx:
     def _loss(self, params, batch):

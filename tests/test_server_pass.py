@@ -53,7 +53,8 @@ def _oracle(x, bases, deltas, losses, sizes, taus, fl, mask=None):
     s = staleness_degree(dists, arrival_mask=mask)
     p = statistical_effect(losses, sizes)
     w = contribution_weights(fl.weighting, p, s, taus, s_min=fl.s_min,
-                             poly_a=fl.poly_a, normalize=fl.normalize,
+                             poly_a=fl.poly_a, hinge_a=fl.hinge_a,
+                             hinge_b=fl.hinge_b, normalize=fl.normalize,
                              arrival_mask=mask)
     k_eff = bases.shape[0] if mask is None else float(jnp.sum(mask))
     upd = jnp.einsum("kn,k->n", deltas.astype(jnp.float32),
@@ -116,9 +117,13 @@ class TestModeParity:
             np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                        rtol=tol, atol=tol, err_msg=mode)
 
-    @pytest.mark.parametrize("policy", ["paper", "fedbuff", "polynomial"])
+    @pytest.mark.parametrize("policy", ["paper", "fedbuff", "polynomial",
+                                        "fedasync_constant",
+                                        "fedasync_hinge", "fedasync_poly"])
     def test_policies_and_mask(self, policy):
-        fl = FLConfig(weighting=policy)
+        # hinge_b=1.0 puts taus 2..3 past the hinge knee, so the fused
+        # kernel's in-kernel reciprocal branch is actually exercised
+        fl = FLConfig(weighting=policy, hinge_b=1.0)
         case = _flat_case(jax.random.PRNGKey(2), 4, 520)
         mask = jnp.array([1.0, 0.0, 1.0, 1.0])
         ref, _, w_ref = _oracle(*case, fl, mask=mask)
