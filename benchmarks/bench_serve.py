@@ -23,14 +23,13 @@ shows up here, not in production. Results land in ``BENCH_serve.json``
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
 import jax
 
 from benchmarks.bench_sim_engine import logreg_init, logreg_loss
-from benchmarks.common import write_csv
+from benchmarks.common import write_bench_json, write_csv
 from repro.configs.base import FLConfig
 from repro.core.serving import ServeConfig, ServingController, serve_stream
 from repro.sim import get_scenario
@@ -109,9 +108,7 @@ def run(num_clients: int = 32, rounds: int = 24, samples_per_client: int = 64,
         "uploads_per_sec": record["paper"]["uploads_per_sec"],
         "round_latency_p99": record["paper"]["round_latency_p99"],
     }
-    path = os.path.join(ROOT, "BENCH_serve.json")
-    with open(path, "w") as f:
-        json.dump(out, f, indent=2)
+    path = write_bench_json(os.path.join(ROOT, "BENCH_serve.json"), out)
     write_csv("serve.csv",
               ["policy", "num_clients", "rounds", "uploads", "seconds",
                "uploads_per_sec", "round_latency_p99", "k_final"], rows)

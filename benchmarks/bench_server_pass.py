@@ -18,13 +18,12 @@ Sweeps K in {4, 8, 16, 32} and model sizes from lenet_fmnist up. Writes
 """
 from __future__ import annotations
 
-import json
 import os
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import time_fn, write_csv
+from benchmarks.common import time_fn, write_bench_json, write_csv
 from repro.configs.base import FLConfig
 from repro.core.aggregation import aggregate
 from repro.core.server_pass import make_server_pass
@@ -159,9 +158,8 @@ def run(quick: bool = False):
             "pass": bool(accept and accept[0]["speedup_batched"] >= 2.0),
         },
     }
-    json_path = os.path.join(ROOT, "BENCH_server_pass.json")
-    with open(json_path, "w") as f:
-        json.dump(payload, f, indent=2)
+    json_path = write_bench_json(
+        os.path.join(ROOT, "BENCH_server_pass.json"), payload)
     print(f"  wrote {path}")
     print(f"  wrote {json_path} (K=16 lenet speedup "
           f"x{payload['acceptance']['speedup_batched']:.2f})")

@@ -132,7 +132,7 @@ def _worker(devices: int, quick: bool) -> None:
 
 
 def run(quick: bool = False, device_counts=(1, 2, 4, 8)):
-    from benchmarks.common import write_csv
+    from benchmarks.common import write_bench_json, write_csv
 
     records = {}
     for d in device_counts:
@@ -181,9 +181,7 @@ def run(quick: bool = False, device_counts=(1, 2, 4, 8)):
             str(d): records[str(d)]["server_pass_us"]
             / base["server_pass_us"] for d in device_counts},
     }
-    path = os.path.join(ROOT, "BENCH_shard_scale.json")
-    with open(path, "w") as f:
-        json.dump(out, f, indent=2)
+    path = write_bench_json(os.path.join(ROOT, "BENCH_shard_scale.json"), out)
     write_csv("shard_scale.csv",
               ["devices", "server_pass_us", "engine_events_per_sec",
                "num_launches"], rows)

@@ -20,14 +20,13 @@ into one big one), so conv workloads land near parity on CPU.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import write_csv
+from benchmarks.common import write_bench_json, write_csv
 from repro.configs.base import FLConfig
 from repro.core import run_async_legacy, run_vectorized
 from repro.models.lenet import init_lenet, lenet_loss
@@ -132,9 +131,7 @@ def run(num_clients: int = 64, buffer_k: int = 16, rounds: int = 16,
         "vectorized": record["logreg"]["vectorized"],
         "speedup": speedup,
     }
-    path = os.path.join(ROOT, "BENCH_sim_engine.json")
-    with open(path, "w") as f:
-        json.dump(out, f, indent=2)
+    path = write_bench_json(os.path.join(ROOT, "BENCH_sim_engine.json"), out)
     write_csv("sim_engine.csv",
               ["workload", "engine", "num_clients", "buffer_k", "rounds",
                "events", "seconds", "events_per_sec"], rows)

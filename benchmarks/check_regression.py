@@ -16,8 +16,12 @@ lane goes red instead of silently uploading artifacts:
   O(T / rounds_per_launch) dispatch contract is exact, not statistical).
 
 Absolute events/sec baselines encode the hardware they were measured
-on: after a runner-class change, regenerate ``BENCH_*.json`` from a
-nightly artifact and commit it, or the gate reds on hardware delta.
+on: when the ``meta`` provenance stamp (benchmarks/common.py) shows the
+baseline and the fresh run used different backends or device kinds, the
+comparison is REFUSED (skipped loudly with regeneration instructions)
+instead of flagging a bogus hardware-delta "regression". After a
+runner-class change, regenerate ``BENCH_*.json`` and commit it to
+re-arm the gate.
 
 Usage (the nightly job, after the benches rewrote the files in place):
 
@@ -53,6 +57,36 @@ def load_fresh(name: str) -> Optional[dict]:
         return None
     with open(path) as f:
         return json.load(f)
+
+
+def _provenance(doc: dict) -> Tuple[Optional[str], Optional[str]]:
+    """(backend, device_kind) for a bench doc, preferring the ``meta``
+    stamp (benchmarks.common.run_metadata) over the legacy top-level
+    ``backend`` key.  Backend strings are normalized to their first token
+    so pre-stamp docs like ``"cpu (forced host devices; ...)"`` compare
+    equal to the stamped ``"cpu"``."""
+    meta = doc.get("meta") if isinstance(doc.get("meta"), dict) else {}
+    backend = meta.get("backend") or doc.get("backend")
+    if isinstance(backend, str) and backend:
+        backend = backend.split()[0]
+    else:
+        backend = None
+    kind = meta.get("device_kind")
+    return backend, kind if isinstance(kind, str) else None
+
+
+def backend_mismatch(base_doc: dict, fresh_doc: dict) -> Optional[str]:
+    """Human-readable reason the two docs are NOT comparable (different
+    backend or device kind), or None when comparison is meaningful.
+    Fields missing on either side are not compared — old baselines
+    without a ``meta`` stamp still gate on whatever they do record."""
+    base_b, base_k = _provenance(base_doc)
+    fresh_b, fresh_k = _provenance(fresh_doc)
+    if base_b and fresh_b and base_b != fresh_b:
+        return f"backend {base_b!r} (baseline) vs {fresh_b!r} (fresh)"
+    if base_k and fresh_k and base_k != fresh_k:
+        return f"device_kind {base_k!r} (baseline) vs {fresh_k!r} (fresh)"
+    return None
 
 
 def _get(d: dict, path: Tuple[str, ...]) -> Optional[float]:
@@ -155,6 +189,13 @@ def main() -> None:
             print(f"[skip] {name}: no {which} copy "
                   f"({'fails' if args.strict else 'ignored'} "
                   f"under --strict)")
+            continue
+        mismatch = backend_mismatch(base_doc, fresh_doc)
+        if mismatch:
+            print(f"[skip] {name}: cross-backend comparison refused — "
+                  f"{mismatch}. Absolute throughput is hardware-specific; "
+                  "regenerate the committed baseline on this runner class "
+                  f"(rerun the bench, commit {name}) to re-arm the gate.")
             continue
         base, fresh = extract(base_doc), extract(fresh_doc)
         errs = compare(fresh, base, args.threshold, launches=launches)

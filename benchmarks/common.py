@@ -1,13 +1,57 @@
-"""Shared benchmark utilities (timing, CSV output, ASCII curves)."""
+"""Shared benchmark utilities (timing, CSV output, run metadata)."""
 from __future__ import annotations
 
+import datetime
+import json
 import os
+import subprocess
 import time
-from typing import Callable, List
+from typing import Callable, Dict, List
 
 import jax
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+_REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=_REPO_ROOT, check=True).stdout.strip()
+    except (subprocess.CalledProcessError, OSError):
+        return "unknown"
+
+
+def run_metadata() -> Dict[str, object]:
+    """Provenance stamp for every ``BENCH_*.json``: which software, which
+    hardware, which commit, and when.  ``check_regression.py`` reads
+    ``backend``/``device_kind`` to refuse cross-backend comparisons —
+    absolute events/sec figures are meaningless across hardware classes."""
+    devices = jax.devices()
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": devices[0].device_kind if devices else "unknown",
+        "device_count": jax.device_count(),
+        "process_count": jax.process_count(),
+        "git_sha": _git_sha(),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+
+
+def write_bench_json(path: str, doc: dict) -> str:
+    """Write a benchmark result dict with the ``meta`` provenance stamp.
+
+    An existing ``meta`` dict is merged in (its keys win), so benches can
+    carry bench-specific notes alongside the standard provenance fields."""
+    doc = dict(doc)
+    doc["meta"] = {**run_metadata(), **doc.get("meta", {})}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return path
 
 
 def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:

@@ -1,0 +1,61 @@
+"""Gate a serve_fl --trace-out artifact: schema + span coverage.
+
+The CI serving smoke lane runs this after
+``python -m repro.launch.serve_fl ... --trace-out serve_trace.json``:
+
+* the file must be loadable Chrome-trace-event JSON (the object form
+  with ``traceEvents``; every complete event carries name/ph/ts/pid/tid
+  and a non-negative ``dur``) — ``obs.trace.validate_trace``;
+* the union of the round-lifecycle spans (``collect_window`` + ``apply``
+  by default) must cover at least ``--min-coverage`` of the measured
+  round window — ``obs.trace.span_coverage`` — so the trace actually
+  accounts for where round wall-time goes instead of sampling slivers.
+
+Exits non-zero with a reason on any violation.
+
+Usage:
+    PYTHONPATH=src python scripts/validate_trace.py serve_trace.json \
+        --min-coverage 0.95
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.trace import SPAN_NAMES, span_coverage, validate_trace
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome-trace JSON written by --trace-out")
+    ap.add_argument("--min-coverage", type=float, default=0.95,
+                    help="required fraction of the round window covered "
+                         "by collect_window/apply spans")
+    ap.add_argument("--min-events", type=int, default=1)
+    args = ap.parse_args()
+
+    with open(args.trace) as f:
+        doc = json.load(f)
+    n = validate_trace(doc)
+    if n < args.min_events:
+        print(f"FAIL: {args.trace}: {n} events < {args.min_events}")
+        return 1
+    unknown = {ev["name"] for ev in doc["traceEvents"]} - set(SPAN_NAMES)
+    if unknown:
+        print(f"FAIL: {args.trace}: span names outside the fixed taxonomy "
+              f"(DESIGN.md §9): {sorted(unknown)}")
+        return 1
+    cov = span_coverage(doc)
+    if cov < args.min_coverage:
+        print(f"FAIL: {args.trace}: span coverage {cov:.4f} < "
+              f"{args.min_coverage} — the trace does not account for the "
+              "round wall-time")
+        return 1
+    print(f"ok: {args.trace}: {n} events, span coverage {cov:.4f} "
+          f">= {args.min_coverage}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -50,7 +50,6 @@ from __future__ import annotations
 
 import functools
 import logging
-import warnings
 
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
@@ -99,13 +98,14 @@ def resolve_mode(mode: str, interpret: Optional[bool] = None) -> Tuple[str, bool
                 "%r: the fused/batched Pallas kernels are Mosaic programs "
                 "and compile only for TPU", backend)
     elif mode in ("batched", "fused") and not on_tpu and interpret:
-        warnings.warn(
-            f"server_pass_mode={mode!r} requested on backend {backend!r}: "
-            "Mosaic/Pallas kernels compile only for TPU, so the kernel will "
-            "run in interpret mode (tile-by-tile Python, validation-only — "
-            "orders of magnitude slower). Use server_pass_mode='reference' "
-            f"or 'auto' for a compiled {backend} path.",
-            RuntimeWarning, stacklevel=2)
+        # standardized logging (obs.configure_logging, DESIGN.md §9):
+        # launchers set the level once; this used to be a warnings.warn
+        logger.warning(
+            "server_pass_mode=%r requested on backend %r: Mosaic/Pallas "
+            "kernels compile only for TPU, so the kernel will run in "
+            "interpret mode (tile-by-tile Python, validation-only — orders "
+            "of magnitude slower). Use server_pass_mode='reference' or "
+            "'auto' for a compiled %s path.", mode, backend, backend)
     return mode, interpret
 
 

@@ -26,7 +26,13 @@ actually needs:
 * **Telemetry.** Sustained uploads folded/sec, round-latency quantiles
   (p50/p99), queue-depth high-water mark, per-reason rejection counts,
   and the K trajectory — the numbers ``benchmarks/bench_serve.py`` gates
-  on.
+  on. The counters live on an ``obs.metrics`` registry (DESIGN.md §9) —
+  ``controller.counters`` and ``metrics()`` are stable views of it, so
+  the historical dict shape is unchanged while the registry snapshot
+  gives the JSONL sink / nightly diffing the same numbers with labeled
+  series. An optional ``obs.trace.Tracer`` times the round lifecycle
+  (``collect_window`` open -> K-th fold, ``contribute`` per fold,
+  ``apply`` per round) as Chrome-trace spans.
 
 Time is injected by the caller (``now``): the driver below runs on the
 sim/ scenario clock so tests and CI are deterministic, while a real
@@ -54,6 +60,14 @@ import numpy as np
 
 from repro.configs.base import FLConfig
 from repro.core.round_body import make_streaming_round_body
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import (
+    NULL_TRACER,
+    SPAN_APPLY,
+    SPAN_COLLECT,
+    SPAN_CONTRIBUTE,
+    Tracer,
+)
 
 # admission outcomes (Admission.reason values)
 ADMITTED = "admitted"
@@ -111,7 +125,9 @@ class ServingController:
     """
 
     def __init__(self, loss_fn: Callable, init_params: Any, fl: FLConfig,
-                 cfg: ServeConfig = ServeConfig()):
+                 cfg: ServeConfig = ServeConfig(),
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         if cfg.k_min < 1 or cfg.k_max < cfg.k_min:
             raise ValueError(f"need 1 <= k_min <= k_max, got "
                              f"[{cfg.k_min}, {cfg.k_max}]")
@@ -142,14 +158,27 @@ class ServingController:
 
         self.queue: Deque[Upload] = collections.deque()
         self.busy_until = 0.0  # service-model clock (sim-time)
-        self.counters: Dict[str, int] = {
-            "admitted": 0,
-            "rejected_queue_full": 0,
-            "dropped_stale_ingress": 0,
-            "dropped_stale_queue": 0,
-            "folded": 0,
-            "rounds": 0,
+        # private registry by default: two controllers in one process must
+        # not alias series (pass a shared registry to aggregate instead)
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._counters = {
+            "admitted": self.registry.counter("serve_admitted_total"),
+            "rejected_queue_full": self.registry.counter(
+                "serve_rejected_total", reason="queue_full"),
+            "dropped_stale_ingress": self.registry.counter(
+                "serve_dropped_total", reason="stale_ingress"),
+            "dropped_stale_queue": self.registry.counter(
+                "serve_dropped_total", reason="stale_queue"),
+            "folded": self.registry.counter("serve_folded_total"),
+            "rounds": self.registry.counter("serve_rounds_total"),
         }
+        self._queue_depth = self.registry.gauge("serve_queue_depth")
+        self._k_gauge = self.registry.gauge("serve_k")
+        self._k_gauge.set(self.k)
+        self._latency_hist = self.registry.histogram(
+            "serve_round_latency_seconds")
+        self._round_wall_open: Optional[float] = None  # tracer clock
         self.round_latencies: List[float] = []
         self.round_times: List[float] = []  # apply completion times
         self.k_history: List[Tuple[int, int]] = [(0, self.k)]
@@ -157,6 +186,12 @@ class ServingController:
         self._round_open_at: Optional[float] = None
         self._interarrival: Optional[float] = None
         self._last_arrival: Optional[float] = None
+
+    @property
+    def counters(self) -> Dict[str, int]:
+        """The historical counter dict, now a VIEW of the obs registry —
+        same keys, same values, pinned by tests/test_obs.py parity."""
+        return {k: int(c.value) for k, c in self._counters.items()}
 
     # -- admission control ---------------------------------------------
     def staleness(self, upload: Upload) -> int:
@@ -167,7 +202,7 @@ class ServingController:
         while self.queue and self.staleness(self.queue[0]) > \
                 self.fl.max_staleness:
             self.queue.popleft()
-            self.counters["dropped_stale_queue"] += 1
+            self._counters["dropped_stale_queue"].inc()
 
     def _retry_after(self) -> float:
         """Backoff hint: the time to drain the current queue at the modeled
@@ -179,13 +214,14 @@ class ServingController:
         """Admit one upload into the bounded ingress queue."""
         self._evict_stale()
         if self.staleness(upload) > self.fl.max_staleness:
-            self.counters["dropped_stale_ingress"] += 1
+            self._counters["dropped_stale_ingress"].inc()
             return Admission(False, DROP_MAX_STALENESS, 0.0)
         if len(self.queue) >= self.cfg.queue_capacity:
-            self.counters["rejected_queue_full"] += 1
+            self._counters["rejected_queue_full"].inc()
             return Admission(False, REJECT_QUEUE_FULL, self._retry_after())
         self.queue.append(upload)
-        self.counters["admitted"] += 1
+        self._counters["admitted"].inc()
+        self._queue_depth.set(len(self.queue))
         self.queue_depth_max = max(self.queue_depth_max, len(self.queue))
         self._observe_arrival(now)
         return Admission(True, ADMITTED, 0.0)
@@ -222,35 +258,57 @@ class ServingController:
             upload = self.queue.popleft()
             tau = self.staleness(upload)
             if tau > self.fl.max_staleness:  # out-aged while queued
-                self.counters["dropped_stale_queue"] += 1
+                self._counters["dropped_stale_queue"].inc()
                 continue
-            self.accum, self.v_buf, _, _ = self._contribute(
-                self.params, self.accum, self.update_norm_ring, self.v_buf,
-                jnp.int32(self.count), upload.batch, upload.probe,
-                jnp.float32(upload.data_size), jnp.int32(tau))
+            with self.tracer.span(SPAN_CONTRIBUTE, client=upload.client_id,
+                                  tau=tau):
+                self.accum, self.v_buf, _, _ = self._contribute(
+                    self.params, self.accum, self.update_norm_ring,
+                    self.v_buf, jnp.int32(self.count), upload.batch,
+                    upload.probe, jnp.float32(upload.data_size),
+                    jnp.int32(tau))
             self.busy_until = done
             if self.count == 0:
                 self._round_open_at = upload.sent_at
+                if self._round_wall_open is None:  # first-ever round
+                    self._round_wall_open = self.tracer.now()
             self.count += 1
-            self.counters["folded"] += 1
+            self._counters["folded"].inc()
+        self._queue_depth.set(len(self.queue))
         return rounds
 
     def _apply_round(self, t_done: float) -> None:
-        self.params, self.update_norm_ring = self._apply(
-            self.params, self.accum, self.v_buf, jnp.int32(self.count),
-            self.update_norm_ring)
-        self.accum = jax.tree.map(jnp.zeros_like, self.accum)
-        self.v_buf = jnp.zeros_like(self.v_buf)
+        # the whole collect window is one retroactive span. It opens when
+        # the PREVIOUS apply finished (the server is collecting from that
+        # instant, even before the first fold lands), so collect_window +
+        # apply spans tile the full round wall-time — the property the
+        # trace-coverage acceptance gate (>= 95%) checks.
+        apply_start = self.tracer.now()
+        if self._round_wall_open is not None:
+            self.tracer.complete(SPAN_COLLECT, self._round_wall_open,
+                                 apply_start - self._round_wall_open,
+                                 version=self.version, k=self.count)
+        with self.tracer.span(SPAN_APPLY, version=self.version,
+                              k=self.count):
+            self.params, self.update_norm_ring = self._apply(
+                self.params, self.accum, self.v_buf, jnp.int32(self.count),
+                self.update_norm_ring)
+            # the accumulator reset is part of completing the round: keep
+            # it inside the apply span so spans tile the round wall-time
+            self.accum = jax.tree.map(jnp.zeros_like, self.accum)
+            self.v_buf = jnp.zeros_like(self.v_buf)
         self.count = 0
         self.version += 1
-        self.counters["rounds"] += 1
+        self._counters["rounds"].inc()
         open_at = self._round_open_at if self._round_open_at is not None \
             else t_done
         self.round_latencies.append(t_done - open_at)
+        self._latency_hist.observe(t_done - open_at)
         self.round_times.append(t_done)
         self._round_open_at = None
+        self._round_wall_open = self.tracer.now()  # next window opens now
         if self.cfg.adapt_every and \
-                self.counters["rounds"] % self.cfg.adapt_every == 0:
+                self._counters["rounds"].value % self.cfg.adapt_every == 0:
             self._adapt_k()
 
     def _adapt_k(self) -> None:
@@ -264,6 +322,7 @@ class ServingController:
                             self.cfg.k_min, self.cfg.k_max))
         if new_k != self.k:
             self.k = new_k
+            self._k_gauge.set(new_k)
             self.k_history.append((self.version, self.k))
 
     # -- telemetry -------------------------------------------------------
@@ -295,14 +354,18 @@ class ServingController:
 def serve_stream(controller: ServingController, gen,
                  *, max_rounds: Optional[int] = None,
                  max_events: Optional[int] = None,
-                 max_time: Optional[float] = None) -> Dict[str, Any]:
+                 max_time: Optional[float] = None,
+                 round_hook: Optional[Callable[[int], None]] = None
+                 ) -> Dict[str, Any]:
     """Drive the controller from a continuous arrival stream.
 
     ``gen`` is a ``sim.arrivals.TrafficGenerator`` (or anything with its
     ``pop`` / ``realize`` / ``settle`` protocol). Events are consumed in
     global (time, client) order until one of the bounds trips; the final
     partial buffer is left unapplied (a service has no "end of run").
-    Returns ``controller.metrics()`` plus the event/time bookkeeping.
+    ``round_hook(version)`` fires once per applied round — the periodic
+    metrics flush / windowed-profiler hook serve_fl installs. Returns
+    ``controller.metrics()`` plus the event/time bookkeeping.
     """
     if max_rounds is None and max_events is None and max_time is None:
         raise ValueError("need at least one of max_rounds / max_events / "
@@ -323,7 +386,11 @@ def serve_stream(controller: ServingController, gen,
         if upload is None:  # lost in transit (scenario dropout)
             continue
         adm = controller.offer(upload, t)
+        before = controller.version
         controller.pump(t)
+        if round_hook is not None:
+            for v in range(before + 1, controller.version + 1):
+                round_hook(v)
         gen.settle(cid, t, adm, controller.version, upload)
     out = controller.metrics()
     out["events"] = events

@@ -198,39 +198,64 @@ def _build_dist_train(model, fl, shape, mesh, baxes, dp, meta) -> Program:
 
 
 def make_io_hooks(*, ckpt_path: Optional[str] = None, ckpt_every: int = 0,
-                  log_fn: Callable[[str], None] = print):
-    """Coordinator-gated IO for multi-controller training loops (§7).
+                  log_fn: Callable[[str], None] = print,
+                  registry: Optional[Any] = None,
+                  tracer: Optional[Any] = None,
+                  sink: Optional[Any] = None):
+    """Coordinator-gated IO for multi-controller training loops (§7),
+    reporting into the observability plane (§9).
 
     Returns ``(log, eval_metrics, maybe_save)``:
 
     * ``log(msg)`` — emits only on process 0 (every process may call it);
+      with a ``sink`` (obs.JsonlSink / InMemorySink) each message is also
+      emitted as a structured ``{"event": "log", ...}`` record (the sink
+      applies its own coordinator gate);
     * ``eval_metrics(metrics)`` — fetches a metrics pytree to host floats
       from process-local addressable shards (ALL processes must call it:
       non-replicated leaves cost one resharding collective), returning
       the dict everywhere so control flow stays identical across
-      processes;
+      processes; the fetch is a ``host_sync`` span and every metric lands
+      in a ``train_<name>`` registry gauge;
     * ``maybe_save(step, tree)`` — writes ``ckpt_path`` every
       ``ckpt_every`` steps via the coordinator-gated
-      ``checkpoint.save_checkpoint`` (again: call on every process).
+      ``checkpoint.save_checkpoint`` (again: call on every process),
+      timed as a ``checkpoint`` span and counted in the registry.
 
     Keeping the gate in ONE place means a training loop written against
     these hooks runs unchanged on a laptop and on a pod slice.
     """
     from repro.checkpoint import save_checkpoint
     from repro.launch.multihost import fetch_replicated, is_coordinator
+    from repro.obs.metrics import default_registry
+    from repro.obs.trace import NULL_TRACER, SPAN_CHECKPOINT, SPAN_HOST_SYNC
+
+    reg = registry if registry is not None else default_registry()
+    tr = tracer if tracer is not None else NULL_TRACER
+    syncs = reg.counter("train_host_syncs_total")
+    ckpts = reg.counter("train_checkpoints_total")
 
     def log(msg: str) -> None:
+        if sink is not None:
+            sink.emit({"event": "log", "msg": msg})
         if is_coordinator():
             log_fn(msg)
 
     def eval_metrics(metrics: Any) -> Dict[str, float]:
-        host = fetch_replicated(metrics)
-        return {k: float(np.asarray(v)) for k, v in host.items()}
+        with tr.span(SPAN_HOST_SYNC, what="eval_metrics"):
+            syncs.inc()
+            host = fetch_replicated(metrics)
+        out = {k: float(np.asarray(v)) for k, v in host.items()}
+        for k, v in out.items():
+            reg.gauge(f"train_{k}").set(v)
+        return out
 
     def maybe_save(step: int, tree: Any) -> bool:
         if not ckpt_path or not ckpt_every or step % ckpt_every:
             return False
-        save_checkpoint(ckpt_path, tree, step=step)
+        with tr.span(SPAN_CHECKPOINT, step=step):
+            ckpts.inc()
+            save_checkpoint(ckpt_path, tree, step=step)
         return True
 
     return log, eval_metrics, maybe_save

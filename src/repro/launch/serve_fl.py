@@ -11,14 +11,33 @@ arrival rate to hold round cadence near ``--target-latency``.
 Everything is in-process and deterministic under ``--seed`` — no sockets
 — so the same entry point doubles as the CI serving smoke lane.
 
+The observability plane (DESIGN.md §9) hangs off four flags:
+
+* ``--trace-out t.json``    Chrome-trace spans of the round lifecycle
+                            (``collect_window``/``contribute``/``apply``)
+                            — load in perfetto / chrome://tracing; the CI
+                            smoke lane validates the schema and >= 95%
+                            round-wall-time span coverage;
+* ``--metrics-out m.jsonl`` JSONL metrics snapshots, one event every
+                            ``--flush-every`` rounds plus a final one
+                            (coordinator-gated; the nightly job uploads
+                            this as an artifact);
+* ``--profile-dir d``       with ``--profile-every N``: a windowed
+                            ``jax.profiler`` device capture every N
+                            rounds, host spans annotated onto the device
+                            timeline;
+* ``--log-level``           drives ``obs.configure_logging``.
+
 Example:
   PYTHONPATH=src python -m repro.launch.serve_fl --scenario paper-fig1 \
-      --clients 32 --rounds 20 --weighting fedasync_hinge --json
+      --clients 32 --rounds 20 --weighting fedasync_hinge \
+      --trace-out serve_trace.json --json
 """
 from __future__ import annotations
 
 import argparse
 import json
+import logging
 import time
 
 import jax
@@ -26,12 +45,18 @@ import jax
 from repro.configs.base import FLConfig
 from repro.core.serving import ServeConfig, ServingController, serve_stream
 from repro.models.lenet import init_lenet, lenet_loss
+from repro.obs import (
+    JsonlSink,
+    MetricsRegistry,
+    Tracer,
+    WindowedProfiler,
+    configure_logging,
+    emit_snapshot,
+)
 from repro.sim import get_scenario
 from repro.sim.arrivals import TrafficGenerator
 
-
-def log(msg: str) -> None:
-    print(msg, flush=True)
+logger = logging.getLogger("repro.launch.serve_fl")
 
 
 def main() -> None:
@@ -62,7 +87,31 @@ def main() -> None:
                     help="sim-time horizon")
     ap.add_argument("--json", action="store_true",
                     help="dump the full metrics dict as JSON")
+    # observability (DESIGN.md §9)
+    ap.add_argument("--log-level", default="info",
+                    help="debug/info/warning/error (obs.configure_logging)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write Chrome-trace-event JSON of the round "
+                         "lifecycle here (perfetto-loadable)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="append JSONL metrics snapshots here "
+                         "(coordinator-gated)")
+    ap.add_argument("--flush-every", type=int, default=8,
+                    help="rounds between metrics-out snapshots")
+    ap.add_argument("--profile-dir", default=None,
+                    help="jax.profiler capture directory (windowed)")
+    ap.add_argument("--profile-every", type=int, default=0,
+                    help="rounds between device-profile windows (0 = off)")
+    ap.add_argument("--profile-window", type=int, default=1,
+                    help="rounds each device-profile window stays open")
     args = ap.parse_args()
+
+    configure_logging(args.log_level)
+    registry = MetricsRegistry()
+    tracer = Tracer(enabled=bool(args.trace_out))
+    profiler = WindowedProfiler(args.profile_dir, every=args.profile_every,
+                                window=args.profile_window)
+    sink = JsonlSink(args.metrics_out) if args.metrics_out else None
 
     fl = FLConfig(num_clients=args.clients, buffer_size=args.buffer_k,
                   max_staleness=args.max_staleness,
@@ -80,31 +129,50 @@ def main() -> None:
     behavior = sc.behavior(args.clients, seed=args.seed)
 
     params = init_lenet(jax.random.PRNGKey(args.seed))
-    ctrl = ServingController(lenet_loss, params, fl, cfg)
+    ctrl = ServingController(lenet_loss, params, fl, cfg,
+                             registry=registry, tracer=tracer)
     gen = TrafficGenerator(clients, behavior, fl)
 
-    log(f"serving scenario={sc.name} clients={args.clients} "
-        f"weighting={args.weighting} K0={ctrl.k} "
-        f"target_latency={args.target_latency}")
+    def round_hook(version: int) -> None:
+        profiler.on_round(version)
+        if sink is not None and args.flush_every \
+                and version % args.flush_every == 0:
+            emit_snapshot(sink, registry, version=version)
+            sink.flush()
+
+    logger.info("serving scenario=%s clients=%d weighting=%s K0=%d "
+                "target_latency=%s", sc.name, args.clients, args.weighting,
+                ctrl.k, args.target_latency)
     t0 = time.perf_counter()
     out = serve_stream(ctrl, gen, max_rounds=args.rounds,
-                       max_events=args.max_events, max_time=args.max_time)
+                       max_events=args.max_events, max_time=args.max_time,
+                       round_hook=round_hook)
     dt = time.perf_counter() - t0
     out["seconds"] = dt
     out["uploads_per_sec"] = out["folded"] / dt if dt > 0 else 0.0
 
-    log(f"{out['rounds']} rounds / {out['folded']} uploads folded in "
-        f"{dt:.2f}s -> {out['uploads_per_sec']:.1f} uploads/s")
-    log(f"round latency p50={out['round_latency_p50']:.3f}s "
-        f"p99={out['round_latency_p99']:.3f}s (sim), "
-        f"cadence mean={out['round_cadence_mean']:.3f}s, "
-        f"arrival rate={out['arrival_rate']:.2f}/s, K -> {out['k']}")
-    log(f"admission: admitted={out['admitted']} "
-        f"queue_full={out['rejected_queue_full']} "
-        f"stale_ingress={out['dropped_stale_ingress']} "
-        f"stale_queue={out['dropped_stale_queue']} "
-        f"lost={out['lost_in_transit']} retries={out['retries_scheduled']} "
-        f"queue_depth_max={out['queue_depth_max']}")
+    logger.info("%d rounds / %d uploads folded in %.2fs -> %.1f uploads/s",
+                out["rounds"], out["folded"], dt, out["uploads_per_sec"])
+    logger.info("round latency p50=%.3fs p99=%.3fs (sim), cadence "
+                "mean=%.3fs, arrival rate=%.2f/s, K -> %d",
+                out["round_latency_p50"], out["round_latency_p99"],
+                out["round_cadence_mean"], out["arrival_rate"], out["k"])
+    logger.info("admission: admitted=%d queue_full=%d stale_ingress=%d "
+                "stale_queue=%d lost=%d retries=%d queue_depth_max=%d",
+                out["admitted"], out["rejected_queue_full"],
+                out["dropped_stale_ingress"], out["dropped_stale_queue"],
+                out["lost_in_transit"], out["retries_scheduled"],
+                out["queue_depth_max"])
+
+    profiler.close()
+    if sink is not None:
+        emit_snapshot(sink, registry, version=ctrl.version, final=True)
+        sink.close()
+        logger.info("metrics JSONL -> %s", args.metrics_out)
+    if args.trace_out:
+        tracer.write(args.trace_out)
+        logger.info("chrome trace (%d events) -> %s", len(tracer.events),
+                    args.trace_out)
     if args.json:
         print(json.dumps(out, indent=2))
 

@@ -15,6 +15,7 @@ Example:
 from __future__ import annotations
 
 import argparse
+import logging
 import time
 
 import jax
@@ -97,7 +98,12 @@ def main() -> None:
                     help="host:port of process 0 (enables jax.distributed)")
     ap.add_argument("--num-processes", type=int, default=1)
     ap.add_argument("--process-id", type=int, default=0)
+    ap.add_argument("--log-level", default="info",
+                    help="debug/info/warning/error (obs.configure_logging)")
     args = ap.parse_args()
+
+    from repro.obs import configure_logging
+    configure_logging(args.log_level)
 
     if args.coordinator and args.num_processes > 1:
         from repro.launch.multihost import initialize
@@ -124,7 +130,8 @@ def main() -> None:
 
     from repro.launch.program import make_io_hooks
     log, eval_metrics, maybe_save = make_io_hooks(
-        ckpt_path=args.ckpt, ckpt_every=args.ckpt_every)
+        ckpt_path=args.ckpt, ckpt_every=args.ckpt_every,
+        log_fn=logging.getLogger("repro.launch.train").info)
 
     with mesh:
         for r in range(args.rounds):

@@ -1,0 +1,252 @@
+"""Round-lifecycle span tracing: Chrome-trace JSON + device-profile hooks.
+
+``Tracer.span(name)`` times a host-side phase of the round lifecycle and
+records it as a Chrome trace event (``ph: "X"`` complete event, micro-
+second timestamps) loadable in perfetto / ``chrome://tracing``. The span
+taxonomy is fixed (DESIGN.md §9) so traces from every runner line up:
+
+    collect_window   host event-loop window pre-compute / serving wait
+    contribute       one streaming fold (serving path)
+    apply            the jitted round dispatch (engine chunk / eq. 5)
+    host_sync        device -> host fetches (round log, eval metrics)
+    checkpoint       state capture + write
+
+Each span also opens a ``jax.profiler.TraceAnnotation`` (when jax is
+importable and the profiler is active), so a device profile collected by
+``WindowedProfiler`` shows host spans on the same timeline as the XLA
+ops they dispatched — the instrument the ROADMAP's real-TPU psum
+measurement needs.
+
+Overhead contract: a disabled tracer (``Tracer(enabled=False)``, or the
+module ``NULL_TRACER``) returns one shared no-op context manager from
+``span`` — no allocation, no clock read — so instrumented code paths
+cost nothing when tracing is off (< 5% budget on the default bench lane
+even when ON; the nightly ``bench_sim_engine`` gate enforces it).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+SPAN_COLLECT = "collect_window"
+SPAN_CONTRIBUTE = "contribute"
+SPAN_APPLY = "apply"
+SPAN_HOST_SYNC = "host_sync"
+SPAN_CHECKPOINT = "checkpoint"
+SPAN_NAMES = (SPAN_COLLECT, SPAN_CONTRIBUTE, SPAN_APPLY, SPAN_HOST_SYNC,
+              SPAN_CHECKPOINT)
+
+
+def _annotation(name: str):
+    """A jax.profiler.TraceAnnotation when jax is importable, else None.
+
+    Lazy so ``repro.obs`` stays importable (and zero-cost) in contexts
+    without jax; annotations are cheap no-ops when no profiler session
+    is active.
+    """
+    try:
+        import jax
+
+        return jax.profiler.TraceAnnotation(name)
+    except Exception:
+        return None
+
+
+class _NullSpan:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    __slots__ = ("tracer", "name", "cat", "args", "t0", "ann")
+
+    def __init__(self, tracer: "Tracer", name: str, cat: str,
+                 args: Dict[str, Any]):
+        self.tracer = tracer
+        self.name = name
+        self.cat = cat
+        self.args = args
+
+    def __enter__(self):
+        self.ann = _annotation(self.name) if self.tracer.annotate else None
+        if self.ann is not None:
+            self.ann.__enter__()
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        t1 = time.perf_counter()
+        if self.ann is not None:
+            self.ann.__exit__(*exc)
+        self.tracer.complete(self.name, self.t0, t1 - self.t0,
+                             cat=self.cat, **self.args)
+        return False
+
+
+class Tracer:
+    """Collects Chrome trace events; host wall-clock, microsecond units.
+
+    ``t0`` (the first construction instant) anchors the timeline so
+    ``ts`` values stay small; every event carries ``pid`` (the OS pid —
+    jax process index when available would alias on one host) and a
+    caller-chosen ``tid`` lane (default 0 — the runners are
+    single-threaded host loops, so lanes separate *subsystems*, not
+    threads).
+    """
+
+    def __init__(self, enabled: bool = True, annotate: bool = True,
+                 tid: int = 0):
+        self.enabled = enabled
+        self.annotate = annotate and enabled
+        self.tid = tid
+        self.events: List[Dict[str, Any]] = []
+        self.pid = os.getpid()
+        self._t0 = time.perf_counter()
+
+    # -- recording ------------------------------------------------------
+    def span(self, name: str, cat: str = "round", **args):
+        """Context manager timing one phase; no-op when disabled."""
+        if not self.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, cat, args)
+
+    def now(self) -> float:
+        """The tracer clock (perf_counter seconds) for retroactive events."""
+        return time.perf_counter()
+
+    def complete(self, name: str, t_start: float, duration: float,
+                 cat: str = "round", **args) -> None:
+        """Record a span retroactively from explicit clock readings —
+        how the serving loop emits ``collect_window`` (its extent is only
+        known once the K-th fold lands)."""
+        if not self.enabled:
+            return
+        self.events.append({
+            "name": name, "cat": cat, "ph": "X",
+            "ts": (t_start - self._t0) * 1e6, "dur": duration * 1e6,
+            "pid": self.pid, "tid": self.tid,
+            **({"args": args} if args else {})})
+
+    def instant(self, name: str, cat: str = "round", **args) -> None:
+        if not self.enabled:
+            return
+        self.events.append({
+            "name": name, "cat": cat, "ph": "i", "s": "p",
+            "ts": (time.perf_counter() - self._t0) * 1e6,
+            "pid": self.pid, "tid": self.tid,
+            **({"args": args} if args else {})})
+
+    # -- export ---------------------------------------------------------
+    def to_json(self) -> Dict[str, Any]:
+        return {"traceEvents": list(self.events), "displayTimeUnit": "ms"}
+
+    def write(self, path: str) -> str:
+        doc = self.to_json()
+        validate_trace(doc)
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        return path
+
+
+NULL_TRACER = Tracer(enabled=False)
+
+
+def validate_trace(doc: Dict[str, Any]) -> int:
+    """Assert ``doc`` is loadable Chrome-trace-event JSON; returns the
+    event count. The schema the CI smoke lane gates serve_fl's
+    ``--trace-out`` against: the JSON-object form with a ``traceEvents``
+    list where every complete event carries name/ph/ts/pid/tid and a
+    non-negative ``dur``."""
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        raise ValueError("trace must be a JSON object with 'traceEvents'")
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        raise ValueError("'traceEvents' must be a list")
+    for i, ev in enumerate(events):
+        for field in ("name", "ph", "ts", "pid", "tid"):
+            if field not in ev:
+                raise ValueError(f"event {i} missing {field!r}: {ev}")
+        if not isinstance(ev["ts"], (int, float)):
+            raise ValueError(f"event {i}: non-numeric ts {ev['ts']!r}")
+        if ev["ph"] == "X":
+            if not isinstance(ev.get("dur"), (int, float)) or ev["dur"] < 0:
+                raise ValueError(f"event {i}: complete event needs a "
+                                 f"non-negative dur, got {ev.get('dur')!r}")
+    return len(events)
+
+
+def span_coverage(doc: Dict[str, Any], names=(SPAN_COLLECT, SPAN_APPLY),
+                  cat: Optional[str] = "round") -> float:
+    """Fraction of the round-lifecycle wall-span covered by the union of
+    the named spans — the acceptance metric for serve_fl --trace-out
+    (>= 0.95). The denominator runs from the first to the last named
+    event, i.e. the measured round window, not process startup."""
+    ivs = sorted(
+        (ev["ts"], ev["ts"] + ev["dur"]) for ev in doc["traceEvents"]
+        if ev.get("ph") == "X" and ev["name"] in names
+        and (cat is None or ev.get("cat") == cat))
+    if not ivs:
+        return 0.0
+    total = max(hi for _, hi in ivs) - ivs[0][0]
+    if total <= 0:
+        return 1.0
+    covered, cur_lo, cur_hi = 0.0, ivs[0][0], ivs[0][0]
+    for lo, hi in ivs:
+        if lo > cur_hi:
+            covered += cur_hi - cur_lo
+            cur_lo, cur_hi = lo, hi
+        else:
+            cur_hi = max(cur_hi, hi)
+    covered += cur_hi - cur_lo
+    return covered / total
+
+
+class WindowedProfiler:
+    """Windowed ``jax.profiler`` capture: a full device profile every
+    ``every`` rounds, ``window`` rounds long, written under
+    ``profile_dir/round_<n>``. Combined with the per-span
+    ``TraceAnnotation`` this lines device timelines up with the host
+    spans; windowing keeps always-on services from growing unbounded
+    profiles. ``every=0`` disables (the default)."""
+
+    def __init__(self, profile_dir: Optional[str], every: int = 0,
+                 window: int = 1):
+        if every and window < 1:
+            raise ValueError("profiler window must be >= 1 round")
+        self.profile_dir = profile_dir
+        self.every = every if profile_dir else 0
+        self.window = window
+        self._active_until: Optional[int] = None
+
+    def on_round(self, round_idx: int) -> None:
+        """Call once per completed round with its index."""
+        if not self.every:
+            return
+        import jax
+
+        if self._active_until is None and round_idx % self.every == 0:
+            path = os.path.join(self.profile_dir, f"round_{round_idx}")
+            os.makedirs(path, exist_ok=True)
+            jax.profiler.start_trace(path)
+            self._active_until = round_idx + self.window
+        elif self._active_until is not None \
+                and round_idx >= self._active_until:
+            jax.profiler.stop_trace()
+            self._active_until = None
+
+    def close(self) -> None:
+        if self._active_until is not None:
+            import jax
+
+            jax.profiler.stop_trace()
+            self._active_until = None

@@ -50,6 +50,7 @@ from __future__ import annotations
 
 import functools
 import heapq
+import time
 from typing import Any, Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -57,6 +58,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
+from repro.obs.metrics import MetricsRegistry, default_registry
+from repro.obs.trace import (
+    NULL_TRACER,
+    SPAN_APPLY,
+    SPAN_CHECKPOINT,
+    SPAN_COLLECT,
+    SPAN_HOST_SYNC,
+    Tracer,
+)
 from repro.core.round_body import make_ring_round
 from repro.core.server_pass import flatten_tree, make_flat_spec
 from repro.launch.multihost import (
@@ -220,7 +230,9 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
                    mesh: Optional[Any] = None,
                    shard_ring: bool = True,
                    init_state: Optional[EngineState] = None,
-                   capture_state: bool = False) -> SimResult:
+                   capture_state: bool = False,
+                   registry: Optional[MetricsRegistry] = None,
+                   tracer: Optional[Tracer] = None) -> SimResult:
     """Simulate buffered-async FL, many server rounds per XLA launch.
 
     Same contract as the legacy ``run_async`` plus scenario/trace hooks;
@@ -253,8 +265,32 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
     k = fl.buffer_size
     beh = resolve_behavior(n, seed, behavior, scenario, latency, trace)
     ring_depth = fl.max_staleness + 1
-    chunk_step = _make_chunk_step(loss_fn, fl, mesh)
     spans = mesh_spans_processes(mesh)
+
+    # ---- observability plane (DESIGN.md §9) ----------------------------
+    # EVERY XLA dispatch of the round program goes through this one
+    # wrapper, so the registry counter — the number the nightly
+    # launch-count gate reads via SimResult.num_launches — cannot miss a
+    # dispatch site the way a hand-maintained `num_launches += 1` could
+    # (e.g. a future final-eval or warmup path calling chunk_step
+    # directly). The histogram records host-side dispatch time only (no
+    # block_until_ready: the engine deliberately runs ahead of the
+    # device), so it measures the launch overhead the O(T/S) contract
+    # bounds, not device compute.
+    reg = registry if registry is not None else default_registry()
+    tr = tracer if tracer is not None else NULL_TRACER
+    _dispatches = reg.counter("engine_dispatches_total")
+    _launch_hist = reg.histogram("engine_launch_seconds")
+    _syncs = reg.counter("engine_host_syncs_total")
+    _dispatches_start = _dispatches.value
+    _raw_chunk_step = _make_chunk_step(loss_fn, fl, mesh)
+
+    def chunk_step(*args):
+        t0 = time.perf_counter()
+        _dispatches.inc()
+        out = _raw_chunk_step(*args)
+        _launch_hist.observe(time.perf_counter() - t0)
+        return out
 
     if init_state is None:
         params = init_params
@@ -310,7 +346,6 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
                       mesh, jax.sharding.PartitionSpec())))
     pending: List[Dict] = []  # per-round host metadata + device info handles
     event_log: List = []
-    num_launches = 0
 
     def maybe_eval(force=False):
         record_eval(history, eval_fn, version, now, params, eval_every,
@@ -385,13 +420,14 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
 
         # ---- host: pre-compute S windows of events ----------------------
         windows = []
-        for _ in range(s):
-            w = collect_window()
-            version += 1
-            # window clients re-pull: the K-th gets the NEW version
-            base_version[w["cid_trigger"]] = version
-            reschedule(w["cid_trigger"], w["t_trigger"])
-            windows.append(w)
+        with tr.span(SPAN_COLLECT, rounds=s, version=version):
+            for _ in range(s):
+                w = collect_window()
+                version += 1
+                # window clients re-pull: the K-th gets the NEW version
+                base_version[w["cid_trigger"]] = version
+                reschedule(w["cid_trigger"], w["t_trigger"])
+                windows.append(w)
 
         # ---- device: all S rounds in one scanned launch -----------------
         chunk_args = (
@@ -410,8 +446,8 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
             # replicated across the process-spanning mesh needs no
             # communication — each process fills its shards locally
             chunk_args = put_replicated(chunk_args, mesh)
-        params, ring, infos = chunk_step(params, ring, *chunk_args)
-        num_launches += 1
+        with tr.span(SPAN_APPLY, rounds=s, version=version):
+            params, ring, infos = chunk_step(params, ring, *chunk_args)
         # keep only the round-log metadata; the batch arrays would
         # otherwise pin O(total_rounds * K * batch) host memory
         pending.append({"windows": [{"clients": w["clients"], "tau": w["tau"]}
@@ -427,11 +463,13 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
     # log from its own ADDRESSABLE shards — no ``device_get`` of a
     # non-addressable array, no cross-process collective (DESIGN.md §7).
     infos_list = [p.pop("infos") for p in pending]
-    if any(isinstance(leaf, jax.Array) and not leaf.is_fully_addressable
-           for info in infos_list for leaf in jax.tree.leaves(info)):
-        fetched = fetch_replicated(infos_list)
-    else:
-        fetched = jax.device_get(infos_list)
+    with tr.span(SPAN_HOST_SYNC, what="round_log", launches=len(infos_list)):
+        _syncs.inc()
+        if any(isinstance(leaf, jax.Array) and not leaf.is_fully_addressable
+               for info in infos_list for leaf in jax.tree.leaves(info)):
+            fetched = fetch_replicated(infos_list)
+        else:
+            fetched = jax.device_get(infos_list)
     round_log = list(round_log_prefix)
     for meta, logs in zip(pending, fetched):
         windows = meta["windows"]
@@ -451,16 +489,19 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
                  if record_trace else None)
     final_state = None
     if capture_state:
-        final_state = EngineState(
-            version=version, now=now, num_events=num_events,
-            base_version=base_version.copy(), events=tuple(sorted(events)),
-            params=fetch_replicated(params),
-            ring=np.asarray(fetch_replicated(ring), np.float32),
-            behavior=beh.get_state(),
-            dataset_rng=np.stack([c.rng_state() for c in clients]),
-            history=[dict(h) for h in history],
-            round_log=[dict(r) for r in round_log])
+        with tr.span(SPAN_CHECKPOINT, version=version):
+            _syncs.inc()
+            final_state = EngineState(
+                version=version, now=now, num_events=num_events,
+                base_version=base_version.copy(),
+                events=tuple(sorted(events)),
+                params=fetch_replicated(params),
+                ring=np.asarray(fetch_replicated(ring), np.float32),
+                behavior=beh.get_state(),
+                dataset_rng=np.stack([c.rng_state() for c in clients]),
+                history=[dict(h) for h in history],
+                round_log=[dict(r) for r in round_log])
     return SimResult(history=history, server_rounds=version, sim_time=now,
                      round_log=round_log, num_events=num_events,
-                     num_launches=num_launches, trace=trace_out,
-                     final_state=final_state)
+                     num_launches=int(_dispatches.value - _dispatches_start),
+                     trace=trace_out, final_state=final_state)

@@ -72,6 +72,10 @@ def main():
     ap.add_argument("--local-devices", type=int, default=4)
     ap.add_argument("--rounds", type=int, default=6)
     ap.add_argument("--policies", default="paper,fedbuff")
+    ap.add_argument("--sink-dir", default=None,
+                    help="every process points a default-gated JsonlSink "
+                         "at <dir>/metrics_p<idx>.jsonl and emits one "
+                         "snapshot; only the coordinator's file may exist")
     args = ap.parse_args()
 
     os.environ["JAX_PLATFORMS"] = "cpu"
@@ -113,6 +117,19 @@ def main():
 
     report = run_parity(mesh, args.rounds,
                         [p for p in args.policies.split(",") if p])
+
+    if args.sink_dir:
+        # EVERY process emits through the default coordinator gate — the
+        # lazy-open JsonlSink must never create the non-coordinator files
+        from repro.obs import JsonlSink, emit_snapshot
+        from repro.obs.metrics import default_registry
+
+        sink = JsonlSink(os.path.join(
+            args.sink_dir, f"metrics_p{jax.process_index()}.jsonl"))
+        emit_snapshot(sink, default_registry(), mode=args.mode,
+                      process=jax.process_index())
+        sink.close()
+
     if emit:
         print(json.dumps(report))
 

@@ -46,8 +46,10 @@ def _parse_report(stdout: str) -> dict:
 
 
 @pytest.mark.multihost
-def test_two_process_mesh_matches_single_process():
+def test_two_process_mesh_matches_single_process(tmp_path):
     env = _worker_env()
+    sink_dir = str(tmp_path / "sinks")
+    os.makedirs(sink_dir)
     common = ["--rounds", "6", "--policies", ",".join(POLICIES)]
 
     ref = subprocess.run(
@@ -62,7 +64,7 @@ def test_two_process_mesh_matches_single_process():
     procs = [subprocess.Popen(
         [sys.executable, WORKER, "--mode", "multi",
          "--process-id", str(i), "--num-processes", "2",
-         "--coordinator", coordinator] + common,
+         "--coordinator", coordinator, "--sink-dir", sink_dir] + common,
         stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True, env=env)
         for i in range(2)]
     outs = []
@@ -74,6 +76,14 @@ def test_two_process_mesh_matches_single_process():
     # only the coordinator (process 0) emits — the same gate ckpt IO uses
     assert outs[0].strip(), "coordinator emitted no report"
     assert not outs[1].strip(), "non-coordinator emitted output"
+
+    # and the same gate governs the JSONL metrics sink: every process
+    # emitted a snapshot, only process 0's lazy-open sink touched disk
+    assert sorted(os.listdir(sink_dir)) == ["metrics_p0.jsonl"]
+    with open(os.path.join(sink_dir, "metrics_p0.jsonl")) as f:
+        (snap,) = [json.loads(ln) for ln in f]
+    assert snap["event"] == "metrics_snapshot" and snap["process"] == 0
+    assert snap["metrics"]["engine_dispatches_total"] >= 1.0
     multi_report = _parse_report(outs[0])
     assert multi_report["devices"] == 8  # global device count
     assert multi_report["process_count"] == 2

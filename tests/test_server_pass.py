@@ -169,22 +169,34 @@ class TestFlatSpecAdapter:
         with pytest.raises(ValueError):
             resolve_mode("nope")
 
-    def test_explicit_kernel_mode_off_tpu_warns(self):
+    def test_explicit_kernel_mode_off_tpu_warns(self, caplog):
         """Satellite: a non-TPU user asking for the Mosaic kernels gets an
-        actionable warning naming the backend, not a silent slowdown."""
+        actionable warning naming the backend, not a silent slowdown.
+        Emitted through the standardized logging plane (obs, DESIGN.md
+        §9) rather than warnings.warn."""
         if jax.default_backend() == "tpu":
             pytest.skip("kernel modes are native on TPU")
+        import logging
         for mode in ("fused", "batched"):
-            with pytest.warns(RuntimeWarning,
-                              match="compile only for TPU"):
+            caplog.clear()
+            with caplog.at_level(logging.WARNING,
+                                 logger="repro.core.server_pass"):
                 got, interpret = resolve_mode(mode)
+            assert any("compile only for TPU" in r.getMessage()
+                       and r.levelno == logging.WARNING
+                       for r in caplog.records), caplog.records
             assert got == mode and interpret
 
-    def test_auto_fallback_is_silent(self):
+    def test_auto_fallback_is_silent(self, caplog):
+        import logging
         import warnings as _w
         with _w.catch_warnings():
             _w.simplefilter("error")
-            resolve_mode("auto")
+            with caplog.at_level(logging.WARNING,
+                                 logger="repro.core.server_pass"):
+                resolve_mode("auto")
+        assert not [r for r in caplog.records
+                    if r.levelno >= logging.WARNING]
 
 
 def _quad_loss(params, batch):
