@@ -1,0 +1,159 @@
+"""Population-scale scenario engine: device event machine vs host walk.
+
+Sweeps the client population N upward (to 1e6 in ``--full``) running the
+device-resident window kernel (``repro.sim.population.collect_windows``:
+counter-based RNG, vmapped behavior kernel, device top-k selection, one
+dispatch + one sync for the whole T-window scan) and, at small N, the
+host event walk it is pinned against (``host_walk_windows`` over the
+PCG64-backed ``ClientBehavior`` — a heapq pop, a Python-level duration
+draw and a reschedule per event).
+
+Events-only on both sides (no training data plane): this isolates the
+dispatch-bound cost the tentpole targets — advancing the population's
+event state machine — from per-round training compute, which is
+O(K·model) and identical under either engine.
+
+Timing covers a COLD population each iteration: host side counts
+``ClientBehavior`` construction (N PCG64 generator objects) plus the
+initial N-event schedule plus the walk; device side counts the jitted
+statics/init kernels plus the window scan (compile amortised by a
+warmup — steady-state sweep throughput is what a scenarios×seeds runner
+experiences). That asymmetry IS the point: host-side population state is
+O(N) Python objects, device-side state is seven (N,) arrays.
+
+Two assertions back the ISSUE's acceptance criteria:
+
+* host-RSS flatness — peak RSS sampled after each device N must grow
+  by less than ``RSS_BUDGET_MB`` across the whole sweep (N grows 10-100x;
+  the device arrays are ~30 MB at N=1e6, while host-side behavior state
+  would be GBs);
+* >= ``MIN_SPEEDUP``x events/sec over the host walk at N=1e4.
+
+Writes ``BENCH_population_scale.json`` (nightly regression gate:
+events/sec per N, the 1e4 speedup, and the RSS-growth ceiling —
+``benchmarks/check_regression.py``) plus a CSV curve.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import peak_rss_mb, write_bench_json, write_csv
+from repro.configs.base import FLConfig
+from repro.sim import get_scenario
+from repro.sim.population import collect_windows, host_walk_windows
+from repro.sim.scenarios import ClientBehavior
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+SCENARIO = "paper-fig1"     # heterogeneous tiers, no drops: pure dispatch
+WINDOWS = 50                # T server rounds per measurement
+BUFFER_K = 64               # uploads per window
+RSS_BUDGET_MB = 1024.0      # max peak-RSS growth across the device sweep
+MIN_SPEEDUP = 10.0          # device/host events-per-sec floor at N=1e4
+SPEEDUP_N = 10_000
+SEED = 0
+
+# num_clients is metadata to the events-only paths (both key off the
+# behavior's N); buffer_size / max_staleness are what the kernel reads
+FL = FLConfig(num_clients=SPEEDUP_N, buffer_size=BUFFER_K, local_steps=1,
+              local_lr=0.05, batch_size=8, max_staleness=8)
+
+
+def _device_record(n: int) -> dict:
+    """Median-of-3 cold-population device sweep at population size N."""
+    # warmup compiles the statics/init/scan kernels at this N
+    collect_windows(get_scenario(SCENARIO), n, FL, WINDOWS, seed=SEED)
+    times, events = [], 0
+    for _ in range(3):
+        t0 = time.perf_counter()
+        out = collect_windows(get_scenario(SCENARIO), n, FL, WINDOWS,
+                              seed=SEED)
+        times.append(time.perf_counter() - t0)
+        events = out["num_events"]
+    times.sort()
+    dt = times[len(times) // 2]
+    return {"events": int(events), "seconds": round(dt, 4),
+            "events_per_sec": round(events / dt, 1)}
+
+
+def _host_record(n: int) -> dict:
+    """One cold-population host walk (construction + schedule + walk)."""
+    t0 = time.perf_counter()
+    behavior = ClientBehavior(get_scenario(SCENARIO), n, seed=SEED)
+    out = host_walk_windows(behavior, FL, WINDOWS)
+    dt = time.perf_counter() - t0
+    return {"events": int(out["num_events"]), "seconds": round(dt, 4),
+            "events_per_sec": round(out["num_events"] / dt, 1)}
+
+
+def run(quick: bool = False) -> None:
+    device_ns = [10_000, 100_000] if quick else [10_000, 100_000, 1_000_000]
+    host_ns = [1_000, 10_000]
+
+    records: dict = {}
+    rss_samples = []
+    # ascending N, host phase strictly AFTER: ru_maxrss is a monotone
+    # high-water mark, so the device samples must be taken before the
+    # host walk allocates its N PCG64 generators
+    for n in device_ns:
+        rec = _device_record(n)
+        rss_samples.append(peak_rss_mb())
+        rec["peak_rss_mb"] = round(rss_samples[-1], 1)
+        records[str(n)] = {"device": rec}
+        print(f"  device N={n:>9,}: {rec['events_per_sec']:>12,.1f} ev/s "
+              f"({rec['events']} events, {rec['seconds']:.3f}s, "
+              f"rss {rec['peak_rss_mb']:.0f} MB)")
+
+    rss_growth = rss_samples[-1] - rss_samples[0]
+    print(f"  peak-RSS growth over device sweep "
+          f"(N={device_ns[0]:,} -> {device_ns[-1]:,}): {rss_growth:.1f} MB")
+    if rss_growth >= RSS_BUDGET_MB:
+        raise RuntimeError(
+            f"host RSS not flat in N: peak grew {rss_growth:.1f} MB across "
+            f"the device sweep (budget {RSS_BUDGET_MB:.0f} MB)")
+
+    for n in host_ns:
+        rec = _host_record(n)
+        records.setdefault(str(n), {})["host"] = rec
+        print(f"  host   N={n:>9,}: {rec['events_per_sec']:>12,.1f} ev/s "
+              f"({rec['events']} events, {rec['seconds']:.3f}s)")
+
+    dev = records[str(SPEEDUP_N)]["device"]["events_per_sec"]
+    host = records[str(SPEEDUP_N)]["host"]["events_per_sec"]
+    speedup = round(dev / host, 2)
+    print(f"  speedup at N={SPEEDUP_N:,}: {speedup:.1f}x "
+          f"(gate >= {MIN_SPEEDUP:.0f}x)")
+    if speedup < MIN_SPEEDUP:
+        raise RuntimeError(
+            f"device engine only {speedup:.1f}x over the host walk at "
+            f"N={SPEEDUP_N:,} (gate {MIN_SPEEDUP:.0f}x)")
+
+    out = {
+        "bench": "population_scale",
+        "scenario": SCENARIO,
+        "windows": WINDOWS,
+        "buffer_k": BUFFER_K,
+        "max_n": device_ns[-1],
+        "records": records,
+        "speedup_at_10k": speedup,
+        "rss_growth_mb": round(rss_growth, 1),
+        "rss_budget_mb": RSS_BUDGET_MB,
+    }
+    path = write_bench_json(os.path.join(ROOT, "BENCH_population_scale.json"),
+                            out)
+    rows = []
+    for n_str in sorted(records, key=int):
+        rec = records[n_str]
+        rows.append([n_str,
+                     rec.get("device", {}).get("events_per_sec", ""),
+                     rec.get("device", {}).get("peak_rss_mb", ""),
+                     rec.get("host", {}).get("events_per_sec", "")])
+    csv = write_csv("population_scale.csv",
+                    ["n", "device_events_per_sec", "device_peak_rss_mb",
+                     "host_events_per_sec"], rows)
+    print(f"  wrote {os.path.normpath(path)} and {os.path.normpath(csv)}")
+
+
+if __name__ == "__main__":
+    run(quick=os.environ.get("BENCH_QUICK", "") == "1")

@@ -1,19 +1,24 @@
 """Nightly benchmark regression gate.
 
 Compares freshly produced ``BENCH_sim_engine.json`` /
-``BENCH_shard_scale.json`` / ``BENCH_serve.json`` against the COMMITTED
-baselines (``git show
+``BENCH_shard_scale.json`` / ``BENCH_serve.json`` /
+``BENCH_population_scale.json`` against the COMMITTED baselines
+(``git show
 <ref>:<file>``) and exits non-zero on a real regression, so the nightly
 lane goes red instead of silently uploading artifacts:
 
 * throughput: any tracked events/sec figure dropping more than
   ``--threshold`` (default 20% — forced-host-device CPU numbers are
   noisy, real regressions are structural and large);
-* speedup: the sim-engine vectorized/legacy ratio — hardware-RELATIVE,
-  so it stays meaningful even when the runner differs from the machine
-  that produced the baseline;
+* speedup: the sim-engine vectorized/legacy ratio and the population
+  engine's device/host-walk ratio — hardware-RELATIVE, so they stay
+  meaningful even when the runner differs from the machine that
+  produced the baseline;
 * launch count: the engine's num_launches growing AT ALL (the
-  O(T / rounds_per_launch) dispatch contract is exact, not statistical).
+  O(T / rounds_per_launch) dispatch contract is exact, not statistical);
+* memory ceiling: the population engine's peak-RSS growth across its
+  N sweep exceeding 1.5x baseline + 64 MB (the flat-in-N host-memory
+  contract, with slack for allocator jitter).
 
 Absolute events/sec baselines encode the hardware they were measured
 on: when the ``meta`` provenance stamp (benchmarks/common.py) shows the
@@ -140,21 +145,55 @@ def shard_scale_launches(doc: dict) -> Dict[str, int]:
     return out
 
 
+def population_metrics(doc: dict) -> Dict[str, float]:
+    """Device events/sec per population size, plus the N=1e4 speedup over
+    the host event walk (hardware-relative, like the sim-engine one)."""
+    out = {}
+    for n, rec in doc.get("records", {}).items():
+        v = _get(rec, ("device", "events_per_sec"))
+        if v is not None:
+            out[f"population/N={n}/events_per_sec"] = float(v)
+    s = doc.get("speedup_at_10k")
+    if s is not None:
+        out["population/speedup_at_10k"] = float(s)
+    return out
+
+
+def population_rss(doc: dict) -> Dict[str, float]:
+    """Peak-RSS growth across the device N sweep — gated as a CEILING:
+    the flat-in-N host-memory contract regresses when it grows, not when
+    it shrinks."""
+    v = doc.get("rss_growth_mb")
+    return {} if v is None else {"population/rss_growth_mb": float(v)}
+
+
 def compare(fresh: Dict[str, float], base: Dict[str, float],
-            threshold: float, launches: bool = False) -> List[str]:
-    """Failure messages for every regressed metric present in BOTH."""
+            threshold: float, mode: str = "throughput") -> List[str]:
+    """Failure messages for every regressed metric present in BOTH.
+
+    ``mode``: ``"throughput"`` fails on a >threshold DROP; ``"launches"``
+    fails on ANY increase (the dispatch-count contract is exact);
+    ``"ceiling"`` fails when the fresh value exceeds 1.5x baseline plus
+    a 64-unit absolute slack (memory high-water marks jitter, so the
+    ceiling is looser than the throughput gate but still catches an
+    O(N) leak reappearing).
+    """
     failures = []
     for key, base_v in sorted(base.items()):
         if key not in fresh:
             continue
         fresh_v = fresh[key]
-        if launches:
+        if mode == "launches":
             if fresh_v > base_v:
                 failures.append(
                     f"{key}: {fresh_v} launches vs baseline {base_v} — the "
                     "dispatch-count contract regressed")
-            continue
-        if base_v > 0 and fresh_v < (1.0 - threshold) * base_v:
+        elif mode == "ceiling":
+            if fresh_v > 1.5 * base_v + 64.0:
+                failures.append(
+                    f"{key}: {fresh_v:.1f} vs baseline {base_v:.1f} "
+                    f"(ceiling {1.5 * base_v + 64.0:.1f})")
+        elif base_v > 0 and fresh_v < (1.0 - threshold) * base_v:
             failures.append(
                 f"{key}: {fresh_v:.1f} vs baseline {base_v:.1f} "
                 f"({fresh_v / base_v - 1.0:+.1%}, gate -{threshold:.0%})")
@@ -173,14 +212,16 @@ def main() -> None:
     args = ap.parse_args()
 
     checks = (
-        ("BENCH_sim_engine.json", sim_engine_metrics, False),
-        ("BENCH_shard_scale.json", shard_scale_metrics, False),
-        ("BENCH_shard_scale.json", shard_scale_launches, True),
-        ("BENCH_serve.json", serve_metrics, False),
+        ("BENCH_sim_engine.json", sim_engine_metrics, "throughput"),
+        ("BENCH_shard_scale.json", shard_scale_metrics, "throughput"),
+        ("BENCH_shard_scale.json", shard_scale_launches, "launches"),
+        ("BENCH_serve.json", serve_metrics, "throughput"),
+        ("BENCH_population_scale.json", population_metrics, "throughput"),
+        ("BENCH_population_scale.json", population_rss, "ceiling"),
     )
     failures: List[str] = []
     missing = 0
-    for name, extract, launches in checks:
+    for name, extract, mode in checks:
         base_doc = load_baseline(name, args.baseline_ref)
         fresh_doc = load_fresh(name)
         if base_doc is None or fresh_doc is None:
@@ -198,8 +239,9 @@ def main() -> None:
                   f"(rerun the bench, commit {name}) to re-arm the gate.")
             continue
         base, fresh = extract(base_doc), extract(fresh_doc)
-        errs = compare(fresh, base, args.threshold, launches=launches)
-        tag = "launches" if launches else "events/sec"
+        errs = compare(fresh, base, args.threshold, mode=mode)
+        tag = {"launches": "launches",
+               "ceiling": "ceiling"}.get(mode, "events/sec")
         for key in sorted(set(base) & set(fresh)):
             print(f"  {key}: {base[key]:.1f} -> {fresh[key]:.1f}")
         if errs:

@@ -4,7 +4,9 @@ from __future__ import annotations
 import datetime
 import json
 import os
+import resource
 import subprocess
+import sys
 import time
 from typing import Callable, Dict, List
 
@@ -23,11 +25,26 @@ def _git_sha() -> str:
         return "unknown"
 
 
+def peak_rss_mb() -> float:
+    """Peak resident set size of this process so far, in MiB.
+
+    ``getrusage`` reports ``ru_maxrss`` in KiB on Linux and bytes on
+    macOS; monotone over the process lifetime, so sampling it before and
+    after a phase bounds that phase's host-memory high-water mark — the
+    number ``bench_population_scale.py`` asserts is flat in N.
+    """
+    rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    scale = 1024.0 * 1024.0 if sys.platform == "darwin" else 1024.0
+    return float(rss) / scale
+
+
 def run_metadata() -> Dict[str, object]:
     """Provenance stamp for every ``BENCH_*.json``: which software, which
     hardware, which commit, and when.  ``check_regression.py`` reads
     ``backend``/``device_kind`` to refuse cross-backend comparisons —
-    absolute events/sec figures are meaningless across hardware classes."""
+    absolute events/sec figures are meaningless across hardware classes.
+    ``peak_rss_mb`` records the host high-water mark at stamp time (the
+    benches stamp at exit, so it covers the whole run)."""
     devices = jax.devices()
     return {
         "jax_version": jax.__version__,
@@ -36,6 +53,7 @@ def run_metadata() -> Dict[str, object]:
         "device_count": jax.device_count(),
         "process_count": jax.process_count(),
         "git_sha": _git_sha(),
+        "peak_rss_mb": round(peak_rss_mb(), 1),
         "timestamp_utc": datetime.datetime.now(
             datetime.timezone.utc).isoformat(timespec="seconds"),
     }

@@ -6,6 +6,7 @@
   server      CA-AFL server-pass scalability vs FedBuff
   sim_engine  simulator throughput: legacy event loop vs vectorized engine
   shard_scale sharded round substrate: device-count sweep (forced-host CPU)
+  population_scale  device-resident population engine: N sweep to 1e6 clients
   serve       always-on serving loop: sustained uploads/sec, p99 round latency
   roofline    §Roofline table from the dry-run artifacts (analytic terms)
 
@@ -20,7 +21,7 @@ import time
 
 
 KNOWN = ("fig1", "ablation", "buffer_k", "kernels", "server", "sim_engine",
-         "shard_scale", "serve", "roofline")
+         "shard_scale", "population_scale", "serve", "roofline")
 
 
 def main() -> None:
@@ -59,6 +60,10 @@ def main() -> None:
         from benchmarks import bench_shard_scale
         jobs.append(("shard_scale (mesh-sharded round substrate)",
                      lambda: bench_shard_scale.run(quick=quick)))
+    if args.only in (None, "population_scale"):
+        from benchmarks import bench_population_scale
+        jobs.append(("population_scale (device event machine vs host walk)",
+                     lambda: bench_population_scale.run(quick=quick)))
     if args.only in (None, "serve"):
         from benchmarks import bench_serve
         jobs.append(("serve (always-on serving loop)",

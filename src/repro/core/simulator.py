@@ -39,15 +39,20 @@ def run_async(loss_fn: Callable, init_params: Any, clients: Sequence,
     ``engine="vectorized"`` (default) runs each K-upload window as one
     compiled cohort step; ``engine="legacy"`` replays the original
     per-event loop. Both accept ``scenario=``, ``behavior=``, ``trace=``
-    and ``record_trace=`` (see repro.sim).
+    and ``record_trace=`` (see repro.sim). ``engine="population"`` keeps
+    the whole client state machine device-resident (counter-based RNG +
+    top-k window selection, ``repro.sim.population``) — scenario-driven
+    only, built for very large N.
     """
     if engine == "vectorized":
         from repro.sim.engine import run_vectorized as runner
     elif engine == "legacy":
         from repro.sim.legacy import run_async_legacy as runner
+    elif engine == "population":
+        from repro.sim.population import run_population as runner
     else:
         raise ValueError(f"unknown engine {engine!r}; "
-                         "valid: 'vectorized', 'legacy'")
+                         "valid: 'vectorized', 'legacy', 'population'")
     return runner(loss_fn, init_params, clients, fl, total_rounds,
                   eval_fn=eval_fn, eval_every=eval_every, latency=latency,
                   seed=seed, **kw)

@@ -19,11 +19,16 @@ Cross-process traffic on the engine path is pure data movement — the
 ``data``-axis allgather of client deltas and the replication broadcast of
 the new params — which is exact.
 
-Every process runs the engine's host event loop on the same seeds, so
-per-round metadata (windows, batches, staleness) is identical everywhere
-without communication; device arrays are the only shared state. IO is
-coordinator-gated: ``is_coordinator()`` (process 0) guards checkpoint
-writes and log emission (see checkpoint/ckpt.py, launch/program.py).
+On the §4 engine path every process runs the host event loop on the
+same seeds, so per-round metadata (windows, batches, staleness) is
+identical everywhere without communication; device arrays are the only
+shared state. The §10 population engine removes even that replay:
+window selection runs ON the mesh (client state sharded over ``data``,
+initialized with ``out_shardings`` so each process materializes only
+its addressable shards) and the round log comes back through
+``fetch_replicated``. IO is coordinator-gated: ``is_coordinator()``
+(process 0) guards checkpoint writes and log emission (see
+checkpoint/ckpt.py, launch/program.py).
 """
 from __future__ import annotations
 

@@ -82,6 +82,19 @@ def kclient_pspec() -> P:
     return P(DATA_AXIS)
 
 
+def client_state_pspec() -> P:
+    """(N,) per-client population state/statics: N over ``data``.
+
+    The device-resident scenario engine (``sim/population.py``) keeps the
+    whole client state machine as ``(N,)``-leading arrays; sharding them
+    over ``data`` is what lets a process-spanning mesh materialize only
+    its addressable shard of a million-client population (no host event
+    walk to replay). Callers fall back to replication when N does not
+    divide the data-axis size.
+    """
+    return P(DATA_AXIS)
+
+
 def info_pspec() -> P:
     """(K,) per-round info arrays (weights, sq_dists, ...): replicated.
 

@@ -58,6 +58,32 @@ def record_eval(history: List[Dict], eval_fn, version: int, now: float,
     history.append({"round": version, "time": now, **eval_fn(params)})
 
 
+def round_log_rows(v0: int, k: int, clients, taus, logs) -> List[Dict]:
+    """Round-log rows for one launch chunk, shared by both engines.
+
+    ``clients``/``taus`` are (S, K) per-round sequences (host lists for
+    the event-walk engine, fetched device arrays for the population
+    engine); ``logs`` holds the chunk's fetched info arrays (``weights``,
+    ``staleness``, ``stat_effect``, ``sq_dists``, each (S, K)). Row ``j``
+    documents server version ``v0 + j + 1`` — the version the round
+    PRODUCED. Taus/clients are int-cast so device f32 staleness and host
+    int lists serialize identically (``round_log_to_arrays`` round-trip).
+    """
+    rows: List[Dict] = []
+    for j in range(len(clients)):
+        rows.append({
+            "version": v0 + j + 1,
+            "weights": np.asarray(logs["weights"][j]).tolist(),
+            "staleness_deg": np.asarray(logs["staleness"][j]).tolist(),
+            "stat_effect": np.asarray(logs["stat_effect"][j]).tolist(),
+            "sq_dists": np.asarray(logs["sq_dists"][j]).tolist(),
+            "tau": [int(t) for t in taus[j]],
+            "clients": [int(c) for c in clients[j]],
+            "k": k,
+        })
+    return rows
+
+
 def round_log_to_arrays(round_log: List[Dict]) -> Dict[str, np.ndarray]:
     """Engine round log (list of per-round dicts) -> dict of stacked arrays.
 

@@ -84,6 +84,7 @@ from repro.sim.base import (  # noqa: F401  (re-exported for callers)
     record_eval,
     resolve_behavior,
     round_log_from_arrays,
+    round_log_rows,
     round_log_to_arrays,
 )
 from repro.sim.scenarios import ClientBehavior, LatencyModel, Scenario
@@ -473,18 +474,10 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
     round_log = list(round_log_prefix)
     for meta, logs in zip(pending, fetched):
         windows = meta["windows"]
-        v0 = meta["v_end"] - len(windows)
-        for j, w in enumerate(windows):
-            round_log.append({
-                "version": v0 + j + 1,
-                "weights": logs["weights"][j].tolist(),
-                "staleness_deg": logs["staleness"][j].tolist(),
-                "stat_effect": logs["stat_effect"][j].tolist(),
-                "sq_dists": logs["sq_dists"][j].tolist(),
-                "tau": w["tau"],
-                "clients": w["clients"],
-                "k": k,
-            })
+        round_log.extend(round_log_rows(
+            meta["v_end"] - len(windows), k,
+            [w["clients"] for w in windows],
+            [w["tau"] for w in windows], logs))
     trace_out = (EventTrace.from_behavior(beh, event_log)
                  if record_trace else None)
     final_state = None

@@ -15,6 +15,12 @@ size consumed it. That is what makes sync-vs-async (and paper-vs-FedBuff)
 wall-clock comparisons fair: every run sees identical per-client
 durations. Recorded draws round-trip through ``sim.traces`` so any
 timeline can be replayed exactly.
+
+The PCG64 streams here are host objects — O(N) Python state. For very
+large populations the same scenario semantics run device-resident with
+counter-based draws in ``sim/population.py`` (DESIGN.md §10);
+``CounterBehavior`` subclasses ``ClientBehavior`` to consume those
+counter streams through this module's interface for parity testing.
 """
 from __future__ import annotations
 

@@ -5,6 +5,15 @@ host-side RNG stream — per-client behavior draws AND per-client dataset
 batch sampling — into npz-storable arrays. One PCG64 generator packs to
 a (6,) uint64 row: [state_hi, state_lo, inc_hi, inc_lo, has_uint32,
 uinteger]; a list of generators packs to (n, 6).
+
+Scope note (DESIGN.md §10): this pack exists for MUTABLE generator
+streams only. The device-resident population engine
+(``sim/population.py``) replaced them with counter-based threefry draws,
+whose whole stream state is the plain integer draw counters — its
+checkpoints (``PopulationEngineState``, ``CounterBehavior.get_state``,
+``CounterDataset.rng_state``) never touch this module. It remains the
+checkpoint format for the host-walk engine's PCG64 path
+(``ClientBehavior``/``ClientDataset``).
 """
 from __future__ import annotations
 

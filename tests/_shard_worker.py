@@ -158,6 +158,51 @@ def ring_errors(mesh, rounds=6):
             "per_device_ring_bytes": expect}
 
 
+def population_errors(mesh, rounds=8):
+    """Sharded population engine vs single-device on identical streams.
+
+    Counter draws are keyed by (cid, attempt), not by device placement,
+    so sharding the (N,) client-state arrays over the data axis must not
+    change a single window: cids/taus/slots are compared EXACTLY, upload
+    times and round maths at f32 rounding level."""
+    from repro.sim import get_scenario
+    from repro.sim.population import collect_windows, run_population
+
+    sc = get_scenario("dropout-bernoulli")
+    n, k, t = 8, 4, 10
+    fl = FLConfig(num_clients=n, buffer_size=k, local_steps=2,
+                  local_lr=0.05, batch_size=8, max_staleness=4)
+    ref = collect_windows(sc, n, fl, t, seed=3)
+    got = collect_windows(sc, n, fl, t, seed=3, mesh=mesh)
+    meta_err = 0.0 if (np.array_equal(ref["clients"], got["clients"])
+                       and np.array_equal(ref["tau"], got["tau"])
+                       and np.array_equal(ref["slots"], got["slots"])
+                       and ref["num_events"] == got["num_events"]) else 1.0
+    t_err = float(np.max(np.abs(ref["t"] - got["t"])))
+
+    fl6 = FLConfig(num_clients=6, buffer_size=2, local_steps=2,
+                   local_lr=0.05, batch_size=8, max_staleness=4)
+    eval_fn = lambda p: {"wnorm": float(jnp.sum(p["w"] ** 2))}  # noqa: E731
+    runs = {}
+    for name, m in (("single", None), ("sharded", mesh)):
+        runs[name] = run_population(
+            _quad_loss, {"w": jnp.zeros(4)}, _quad_clients(), fl6,
+            total_rounds=rounds, eval_fn=eval_fn, eval_every=2,
+            scenario=sc, seed=0, mesh=m)
+    ref_r, got_r = runs["single"], runs["sharded"]
+    assert [l["clients"] for l in ref_r.round_log] == \
+           [l["clients"] for l in got_r.round_log]
+    assert [l["tau"] for l in ref_r.round_log] == \
+           [l["tau"] for l in got_r.round_log]
+    werr = max(float(np.max(np.abs(np.asarray(a["weights"])
+                                   - np.asarray(b["weights"]))))
+               for a, b in zip(ref_r.round_log, got_r.round_log))
+    herr = max(abs(a["wnorm"] - b["wnorm"])
+               for a, b in zip(ref_r.history, got_r.history))
+    return {"win_meta": meta_err, "win_t": t_err,
+            "pop_weights": werr, "pop_wnorm": herr}
+
+
 def cohort_errors(mesh, cohort=4, seed=0):
     """Sharded make_cohort_step vs single-device on one quad round."""
     fl = FLConfig(buffer_size=cohort, local_steps=2, local_lr=0.1,
@@ -221,6 +266,8 @@ def run_all():
         default_block=True)
     report["engine"] = engine_errors(mesh_d2m4)
     report["cohort"] = cohort_errors(mesh_d2m4)
+    # population engine: data-axis-sharded client state, exact windows
+    report["population"] = population_errors(mesh_d2m4)
     # sharded-ring vs replicated-ring: bit parity + per-device footprint
     report["ring"] = ring_errors(mesh_d2m4)
     report["ring_m8"] = ring_errors(mesh_m8)

@@ -1,0 +1,295 @@
+"""Device-resident population engine (sim/population.py, DESIGN.md §10).
+
+Parity contract: at small N the device event machine — counter-based
+threefry draws, vmapped behavior kernel, top-k window selection — must
+reproduce the host event walk EVENT FOR EVENT, and ``run_population``
+must match ``run_vectorized`` driven by the counter twins
+(``CounterBehavior`` / ``CounterDataset``) round for round. Checkpoints
+are plain integer counters: resume must be bit-identical.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+from repro.core import run_async
+from repro.data.synthetic import ClientDataset
+from repro.sim import get_scenario
+from repro.sim.engine import run_vectorized
+from repro.sim.population import (
+    CounterBehavior,
+    CounterDataset,
+    DevicePool,
+    collect_windows,
+    host_walk_windows,
+    make_counter_clients,
+    population_state_from_tree,
+    population_state_to_tree,
+    run_population,
+)
+from repro.sim.scenarios import LatencyModel
+
+
+def _quad_loss(params, batch):
+    x, y = batch
+    return jnp.mean((x @ params["w"] - y) ** 2), {}
+
+
+def _quad_clients(n=6, size=64, d=4, seed=0):
+    rng = np.random.default_rng(seed)
+    w_true = np.arange(1.0, d + 1.0)
+    out = []
+    for i in range(n):
+        x = rng.normal(size=(size, d)).astype(np.float32)
+        y = (x @ w_true + 0.05 * rng.normal(size=size)).astype(np.float32)
+        out.append(ClientDataset(x=x, y=y, seed=seed + 10 + i))
+    return out
+
+
+def _params(d=4):
+    return {"w": jnp.zeros(d)}
+
+
+def _eval_fn(params):
+    return {"wnorm": float(jnp.sum(params["w"] ** 2))}
+
+
+FL = FLConfig(num_clients=6, buffer_size=3, local_steps=2, local_lr=0.05,
+              batch_size=8, max_staleness=4)
+
+
+def _fl(n, k):
+    return FLConfig(num_clients=n, buffer_size=k, local_steps=2,
+                    local_lr=0.05, batch_size=8, max_staleness=4)
+
+
+def _assert_windows_equal(dev, host):
+    np.testing.assert_array_equal(dev["clients"], host["clients"])
+    np.testing.assert_array_equal(dev["tau"], host["tau"])
+    np.testing.assert_array_equal(dev["slots"], host["slots"])
+    np.testing.assert_allclose(dev["t"], host["t"], rtol=1e-5, atol=1e-5)
+    assert dev["num_events"] == host["num_events"]
+
+
+class TestEventParity:
+    """Device top-k windows == host heapq walk on the same counter
+    streams, across behavior models (drops, traces, diurnal gates,
+    bursts, tiers)."""
+
+    @pytest.mark.parametrize("preset", [
+        "paper-fig1", "diurnal-phones", "dropout-bernoulli",
+        "straggler-burst", "dropout-trace", "bandwidth-tiers"])
+    def test_presets(self, preset):
+        sc = get_scenario(preset)
+        n, k, t, seed = 8, 3, 12, 3
+        fl = _fl(n, k)
+        dev = collect_windows(sc, n, fl, t, seed=seed)
+        host = host_walk_windows(CounterBehavior(sc, n, seed=seed), fl, t)
+        _assert_windows_equal(dev, host)
+
+    @pytest.mark.parametrize("preset", ["paper-fig1", "dropout-bernoulli"])
+    def test_reentry_windows(self, preset):
+        # n barely above K: clients re-enter windows, forcing the exact
+        # while_loop fallback — must still match the heap walk
+        sc = get_scenario(preset)
+        n, k, t, seed = 4, 3, 12, 5
+        fl = _fl(n, k)
+        dev = collect_windows(sc, n, fl, t, seed=seed)
+        host = host_walk_windows(CounterBehavior(sc, n, seed=seed), fl, t)
+        _assert_windows_equal(dev, host)
+
+    def test_k_exceeds_n_forced_exact(self):
+        sc = get_scenario("paper-fig1")
+        n, k, t, seed = 3, 5, 6, 1
+        fl = _fl(n, k)
+        dev = collect_windows(sc, n, fl, t, seed=seed)
+        host = host_walk_windows(CounterBehavior(sc, n, seed=seed), fl, t)
+        _assert_windows_equal(dev, host)
+
+
+class TestEngineParity:
+    """run_population == run_vectorized over the counter twins: same
+    windows, same training rounds, same eval history."""
+
+    @pytest.mark.parametrize("preset", [
+        "paper-fig1", "dropout-bernoulli", "diurnal-phones"])
+    def test_full_run(self, preset):
+        sc = get_scenario(preset)
+        clients = _quad_clients()
+        res_p = run_population(_quad_loss, _params(), clients, FL,
+                               total_rounds=10, eval_fn=_eval_fn,
+                               eval_every=5, scenario=sc, seed=3)
+        res_v = run_vectorized(_quad_loss, _params(),
+                               make_counter_clients(_quad_clients(), seed=3),
+                               FL, total_rounds=10, eval_fn=_eval_fn,
+                               eval_every=5,
+                               behavior=CounterBehavior(sc, 6, seed=3),
+                               seed=3)
+        assert res_p.num_events == res_v.num_events
+        assert res_p.server_rounds == res_v.server_rounds == 10
+        assert np.isclose(res_p.sim_time, res_v.sim_time, rtol=1e-6)
+        assert len(res_p.round_log) == len(res_v.round_log) == 10
+        for lp, lv in zip(res_p.round_log, res_v.round_log):
+            assert lp["clients"] == lv["clients"]
+            assert lp["tau"] == lv["tau"]
+            assert lp["version"] == lv["version"]
+            assert lp["k"] == lv["k"]
+            np.testing.assert_allclose(lp["weights"], lv["weights"],
+                                       rtol=1e-4, atol=1e-6)
+            np.testing.assert_allclose(lp["sq_dists"], lv["sq_dists"],
+                                       rtol=1e-4, atol=1e-6)
+        assert [h["round"] for h in res_p.history] == \
+               [h["round"] for h in res_v.history]
+        for hp, hv in zip(res_p.history, res_v.history):
+            assert np.isclose(hp["time"], hv["time"], rtol=1e-6, atol=1e-6)
+            assert np.isclose(hp["wnorm"], hv["wnorm"], rtol=1e-4, atol=1e-6)
+
+    def test_single_launch_per_chunk(self):
+        sc = get_scenario("paper-fig1")
+        res = run_population(_quad_loss, _params(), _quad_clients(), FL,
+                             total_rounds=8, scenario=sc, seed=0,
+                             rounds_per_launch=8)
+        assert res.server_rounds == 8
+        assert res.num_launches <= 2  # init + one scan chunk
+
+    def test_latency_model_rejected(self):
+        with pytest.raises(ValueError, match="LatencyModel"):
+            run_population(_quad_loss, _params(), _quad_clients(), FL,
+                           total_rounds=2,
+                           scenario=get_scenario("paper-fig1"),
+                           latency=LatencyModel(speed_factors=[1.0] * 6),
+                           seed=0)
+
+    def test_run_async_dispatch(self):
+        res = run_async(_quad_loss, _params(), _quad_clients(), FL,
+                        total_rounds=4, engine="population",
+                        scenario=get_scenario("paper-fig1"), seed=0)
+        assert res.server_rounds == 4
+        assert len(res.round_log) == 4
+
+
+class TestCheckpointResume:
+    """Counter checkpoints: plain integer arrays, bit-identical resume."""
+
+    def test_resume_bit_identical(self):
+        sc = get_scenario("dropout-bernoulli")
+        kw = dict(eval_fn=_eval_fn, eval_every=4, scenario=sc, seed=9)
+        full = run_population(_quad_loss, _params(), _quad_clients(), FL,
+                              total_rounds=12, **kw)
+        half = run_population(_quad_loss, _params(), _quad_clients(), FL,
+                              total_rounds=6, capture_state=True, **kw)
+        resumed = run_population(_quad_loss, _params(), _quad_clients(), FL,
+                                 total_rounds=12,
+                                 init_state=half.final_state, **kw)
+        assert resumed.num_events == full.num_events
+        assert np.isclose(resumed.sim_time, full.sim_time)
+        assert len(resumed.round_log) == len(full.round_log)
+        for lr, lf in zip(resumed.round_log, full.round_log):
+            assert lr["clients"] == lf["clients"]
+            assert lr["tau"] == lf["tau"]
+            np.testing.assert_array_equal(np.asarray(lr["weights"]),
+                                          np.asarray(lf["weights"]))
+        assert [(h["round"], h["time"], h["wnorm"])
+                for h in resumed.history] == \
+               [(h["round"], h["time"], h["wnorm"]) for h in full.history]
+
+    def test_state_tree_round_trip(self):
+        sc = get_scenario("dropout-bernoulli")
+        kw = dict(eval_fn=_eval_fn, eval_every=4, scenario=sc, seed=9)
+        half = run_population(_quad_loss, _params(), _quad_clients(), FL,
+                              total_rounds=6, capture_state=True, **kw)
+        tree = population_state_to_tree(half.final_state)
+        state2 = population_state_from_tree(tree)
+        res_a = run_population(_quad_loss, _params(), _quad_clients(), FL,
+                               total_rounds=12,
+                               init_state=half.final_state, **kw)
+        res_b = run_population(_quad_loss, _params(), _quad_clients(), FL,
+                               total_rounds=12, init_state=state2, **kw)
+        for la, lb in zip(res_a.round_log, res_b.round_log):
+            np.testing.assert_array_equal(np.asarray(la["weights"]),
+                                          np.asarray(lb["weights"]))
+
+
+class TestCounterTwins:
+    """CounterBehavior / CounterDataset: the host-side consumers of the
+    device counter streams."""
+
+    def test_behavior_counter_checkpoint(self):
+        sc = get_scenario("dropout-bernoulli")
+        beh = CounterBehavior(sc, 4, seed=7)
+        for cid in range(4):
+            beh.duration(cid, 1.0)
+            beh.next_upload(cid)
+        snap = beh.get_state()
+        a = [beh.duration(cid, 2.0) for cid in range(4)]
+        beh2 = CounterBehavior(sc, 4, seed=7)
+        beh2.set_state(snap)
+        b = [beh2.duration(cid, 2.0) for cid in range(4)]
+        assert a == b
+
+    def test_dataset_counter_draws(self):
+        base = _quad_clients(n=2)[0]
+        ds = CounterDataset(x=base.x, y=base.y, seed=base.seed, cid=0,
+                            stream_seed=3)
+        ds2 = CounterDataset(x=base.x, y=base.y, seed=base.seed, cid=0,
+                             stream_seed=3)
+        a = ds.batches(8, 2)
+        row = ds2.rng_state()
+        b = ds2.batches(8, 2)
+        assert all(np.array_equal(xa, xb) and np.array_equal(ya, yb)
+                   for (xa, ya), (xb, yb) in zip(a, b))
+        # counters restore: replaying from the snapshot repeats the draws
+        ds2.set_rng_state(row)
+        c = ds2.batches(8, 2)
+        assert all(np.array_equal(xb, xc)
+                   for (xb, _), (xc, _) in zip(b, c))
+        # probe stream is independent of the train stream
+        pa = ds.batch(8)
+        ds_fresh = CounterDataset(x=base.x, y=base.y, seed=base.seed, cid=0,
+                                  stream_seed=3)
+        pb = ds_fresh.batch(8)
+        assert np.array_equal(pa[0], pb[0])
+
+    def test_batch_indices_not_supported(self):
+        base = _quad_clients(n=1)[0]
+        ds = CounterDataset(x=base.x, y=base.y, seed=base.seed, cid=0,
+                            stream_seed=0)
+        with pytest.raises(NotImplementedError):
+            ds.batch_indices(8)
+
+
+class TestDevicePool:
+    def test_from_clients(self):
+        clients = _quad_clients(n=3, size=16)
+        pool = DevicePool.from_clients(clients)
+        assert pool.num_clients == 3
+        assert pool.x.shape[0] == 48
+        np.testing.assert_array_equal(np.asarray(pool.sizes), [16, 16, 16])
+        np.testing.assert_array_equal(np.asarray(pool.offsets), [0, 16, 32])
+
+    def test_shared_pool(self):
+        x = np.arange(100, dtype=np.float32).reshape(100, 1)
+        y = np.zeros(100, np.float32)
+        pool = DevicePool.shared(x, y, num_clients=10, samples_per_client=30)
+        assert pool.num_clients == 10
+        assert pool.x.shape[0] == 100  # O(pool), not O(clients x samples)
+        sizes = np.asarray(pool.sizes)
+        offs = np.asarray(pool.offsets)
+        assert (sizes == 30).all()
+        assert (offs + sizes <= 100).all()
+
+    def test_run_population_accepts_pool(self):
+        clients = _quad_clients()
+        pool = DevicePool.from_clients(clients)
+        res_pool = run_population(_quad_loss, _params(), pool, FL,
+                                  total_rounds=4,
+                                  scenario=get_scenario("paper-fig1"),
+                                  seed=0)
+        res_list = run_population(_quad_loss, _params(), clients, FL,
+                                  total_rounds=4,
+                                  scenario=get_scenario("paper-fig1"),
+                                  seed=0)
+        for lp, ll in zip(res_pool.round_log, res_list.round_log):
+            np.testing.assert_array_equal(np.asarray(lp["weights"]),
+                                          np.asarray(ll["weights"]))

@@ -326,6 +326,9 @@ class TestShardedFlatSpec:
 TOL = {"new_x": 1e-5, "sq_dists": 1e-3, "weights": 1e-5,
        "global": 1e-5, "client_params": 1e-5, "metrics": 1e-5,
        "history_wnorm": 1e-5,
+       # population engine: window metadata is EXACT under sharding
+       "win_meta": 0.0, "win_t": 1e-5,
+       "pop_weights": 1e-5, "pop_wnorm": 1e-5,
        # sharded ring vs replicated ring: same program, BIT-identical
        "ring_weights_bits": 0.0, "ring_history_bits": 0.0,
        "ring_bytes_err": 0.0}
