@@ -1,0 +1,209 @@
+"""Version-ring memory: codec x model-size sweep (DESIGN.md §11).
+
+Measures what the compressed version store actually buys: the per-device
+bytes of the R-deep ring under each codec (``f32`` identity, ``int8``
+per-block affine, ``delta`` sparse residual), across model sizes —
+REAL allocations for the small models (sum of the ring state's leaf
+``nbytes``, cross-checked against ``codec.device_bytes`` to the byte)
+and analytic quotes for the large-model registry entries (gemma-7b,
+qwen1.5-110b via ``jax.eval_shape`` — no parameters are materialized),
+both whole and under 8-way model sharding.
+
+"Smaller" only counts at matched convergence, so the sweep also runs the
+quadratic engine workload per codec and pins the final eval metric to
+the f32 run within a 5% relative tolerance before asserting the
+headline gate: **int8 >= 3x fewer ring bytes than f32 on every model**.
+
+Writes ``BENCH_ring_memory.json`` (nightly regression gate: per-device
+ring bytes are gated as a CEILING — a codec regression that re-inflates
+the ring turns the lane red — see ``benchmarks/check_regression.py``)
+plus a CSV table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import write_bench_json, write_csv
+from repro.configs.base import FLConfig
+from repro.core.server_pass import make_flat_spec
+from repro.core.version_store import CODECS
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+MIN_INT8_REDUCTION = 3.0    # bytes(f32) / bytes(int8) floor, every model
+PARITY_RTOL = 0.05          # matched-convergence tolerance vs f32
+PARITY_ROUNDS = 8
+ANALYTIC_SHARDS = 8         # large-model quotes also under 8-way sharding
+
+FL = FLConfig(num_clients=6, buffer_size=3, local_steps=2, local_lr=0.05,
+              batch_size=8, max_staleness=4)
+
+
+def _fl(codec: str) -> FLConfig:
+    return dataclasses.replace(FL, ring_codec=codec)
+
+
+def _measured_models() -> dict:
+    """Small models whose rings are REALLY allocated: name -> params."""
+    from repro.configs.base import ModelConfig
+    from repro.models.lenet import init_lenet
+    from repro.models.model import build_model
+
+    # a real models/ transformer at multi-M params (the fine-tuning
+    # workload shape the codec targets, CPU-allocatable)
+    cfg = ModelConfig(name="bench-5m", family="dense", num_layers=4,
+                      d_model=256, num_heads=4, num_kv_heads=4,
+                      d_ff=1024, vocab_size=2048)
+    xf = build_model(cfg).init(jax.random.PRNGKey(0))
+    return {
+        "quad4": {"w": jnp.zeros(4)},
+        "lenet": init_lenet(jax.random.PRNGKey(0)),
+        "transformer_5m": xf,
+    }
+
+
+def _analytic_models() -> dict:
+    """Registry entries quoted via eval_shape: name -> abstract params."""
+    from repro.configs.registry import get_arch
+    from repro.models.model import build_model
+    out = {}
+    for aid in ("gemma-7b", "qwen1.5-110b"):
+        model = build_model(get_arch(aid).model)
+        out[aid] = jax.eval_shape(lambda m=model: m.init(jax.random.PRNGKey(0)))
+    return out
+
+
+def _ring_record(params, fl: FLConfig, *, allocate: bool) -> dict:
+    """Bytes-per-device for one (model, codec): measured or analytic."""
+    from repro.core.version_store import resolve_codec, ring_device_bytes
+    from repro.sim.engine import init_version_ring
+
+    spec = make_flat_spec(params, fl.server_pass_block_n)
+    depth = fl.max_staleness + 1
+    quote = ring_device_bytes(fl, spec)
+    rec = {
+        "params": int(spec.n),
+        "bytes_per_device": int(quote),
+        "bytes_per_row": int(quote // depth),
+        "bytes_sharded8": int(ring_device_bytes(
+            fl, spec, model_shards=ANALYTIC_SHARDS)),
+    }
+    if allocate:
+        _, state = init_version_ring(params, fl)
+        got = sum(leaf.nbytes for leaf in jax.tree.leaves(state))
+        if got != quote:
+            raise RuntimeError(
+                f"{resolve_codec(fl).name}: allocated ring is {got} bytes "
+                f"but device_bytes quoted {quote}")
+        rec["bytes_allocated"] = int(got)
+    return rec
+
+
+def _quad_parity() -> dict:
+    """Final quadratic-workload eval per codec, pinned to f32."""
+    from repro.data.synthetic import ClientDataset
+    from repro.sim.engine import run_vectorized
+
+    def loss(params, batch):
+        x, y = batch
+        return jnp.mean((x @ params["w"] - y) ** 2), {}
+
+    def clients(n=6, size=64, d=4, seed=0):
+        rng = np.random.default_rng(seed)
+        w_true = np.arange(1.0, d + 1.0)
+        out = []
+        for i in range(n):
+            x = rng.normal(size=(size, d)).astype(np.float32)
+            y = (x @ w_true + 0.05 * rng.normal(size=size)).astype(np.float32)
+            out.append(ClientDataset(x=x, y=y, seed=seed + 10 + i))
+        return out
+
+    eval_fn = lambda p: {"wnorm": float(jnp.sum(p["w"] ** 2))}  # noqa: E731
+    finals = {}
+    for codec in CODECS:
+        res = run_vectorized(loss, {"w": jnp.zeros(4)}, clients(),
+                             _fl(codec), total_rounds=PARITY_ROUNDS,
+                             eval_fn=eval_fn, eval_every=2, seed=0)
+        finals[codec] = float(res.history[-1]["wnorm"])
+    out = {}
+    ref = finals["f32"]
+    for codec, v in finals.items():
+        rel = abs(v - ref) / max(abs(ref), 1e-12)
+        out[codec] = {"final_wnorm": round(v, 6), "rel_err_vs_f32": round(rel, 6)}
+        if rel > PARITY_RTOL:
+            raise RuntimeError(
+                f"codec {codec!r} diverged from f32 at matched settings: "
+                f"final wnorm {v:.6f} vs {ref:.6f} "
+                f"({rel:.2%} > {PARITY_RTOL:.0%}) — the bytes gate only "
+                "counts at matched convergence")
+    return out
+
+
+def run(quick: bool = False) -> None:
+    del quick  # eval_shape quotes are cheap; one mode fits CI and laptop
+    records: dict = {}
+    for name, params in _measured_models().items():
+        records[name] = {"kind": "measured"}
+        for codec in CODECS:
+            records[name][codec] = _ring_record(params, _fl(codec),
+                                                allocate=True)
+    for name, params in _analytic_models().items():
+        records[name] = {"kind": "analytic"}
+        for codec in CODECS:
+            records[name][codec] = _ring_record(params, _fl(codec),
+                                                allocate=False)
+
+    min_ratio = float("inf")
+    for name, rec in records.items():
+        ratio = rec["f32"]["bytes_per_device"] / rec["int8"]["bytes_per_device"]
+        rec["int8_reduction"] = round(ratio, 2)
+        min_ratio = min(min_ratio, ratio)
+        print(f"  {name:>14s} ({rec['kind']:>8s}): "
+              f"{rec['f32']['params']:>13,d} params  "
+              f"f32 {rec['f32']['bytes_per_device']:>15,d} B  "
+              f"int8 {rec['int8']['bytes_per_device']:>14,d} B  "
+              f"delta {rec['delta']['bytes_per_device']:>14,d} B  "
+              f"({ratio:.2f}x)")
+    print(f"  min int8 reduction: {min_ratio:.2f}x "
+          f"(gate >= {MIN_INT8_REDUCTION:.0f}x)")
+    if min_ratio < MIN_INT8_REDUCTION:
+        raise RuntimeError(
+            f"int8 ring only {min_ratio:.2f}x smaller than f32 "
+            f"(gate {MIN_INT8_REDUCTION:.0f}x)")
+
+    parity = _quad_parity()
+    for codec, rec in parity.items():
+        print(f"  parity {codec:>6s}: final wnorm {rec['final_wnorm']:.4f} "
+              f"(rel err {rec['rel_err_vs_f32']:.2%})")
+
+    out = {
+        "bench": "ring_memory",
+        "ring_depth": FL.max_staleness + 1,
+        "qblock": FL.ring_qblock,
+        "delta_density": FL.ring_delta_density,
+        "analytic_shards": ANALYTIC_SHARDS,
+        "records": records,
+        "parity": parity,
+        "min_int8_reduction": round(min_ratio, 2),
+        "min_int8_reduction_gate": MIN_INT8_REDUCTION,
+    }
+    path = write_bench_json(os.path.join(ROOT, "BENCH_ring_memory.json"), out)
+    rows = []
+    for name in records:
+        for codec in CODECS:
+            r = records[name][codec]
+            rows.append([name, codec, r["params"], r["bytes_per_device"],
+                         r["bytes_per_row"], r["bytes_sharded8"]])
+    csv = write_csv("ring_memory.csv",
+                    ["model", "codec", "params", "bytes_per_device",
+                     "bytes_per_row", "bytes_sharded8"], rows)
+    print(f"  wrote {os.path.normpath(path)} and {os.path.normpath(csv)}")
+
+
+if __name__ == "__main__":
+    run(quick=os.environ.get("BENCH_QUICK", "") == "1")

@@ -2,7 +2,8 @@
 
 Compares freshly produced ``BENCH_sim_engine.json`` /
 ``BENCH_shard_scale.json`` / ``BENCH_serve.json`` /
-``BENCH_population_scale.json`` against the COMMITTED baselines
+``BENCH_population_scale.json`` / ``BENCH_ring_memory.json`` against the
+COMMITTED baselines
 (``git show
 <ref>:<file>``) and exits non-zero on a real regression, so the nightly
 lane goes red instead of silently uploading artifacts:
@@ -18,7 +19,9 @@ lane goes red instead of silently uploading artifacts:
   O(T / rounds_per_launch) dispatch contract is exact, not statistical);
 * memory ceiling: the population engine's peak-RSS growth across its
   N sweep exceeding 1.5x baseline + 64 MB (the flat-in-N host-memory
-  contract, with slack for allocator jitter).
+  contract, with slack for allocator jitter), and the compressed version
+  store's per-device ring bytes per (model, codec) re-inflating past the
+  committed quote (DESIGN.md §11).
 
 Absolute events/sec baselines encode the hardware they were measured
 on: when the ``meta`` provenance stamp (benchmarks/common.py) shows the
@@ -159,6 +162,24 @@ def population_metrics(doc: dict) -> Dict[str, float]:
     return out
 
 
+def ring_memory_bytes(doc: dict) -> Dict[str, float]:
+    """Per-device ring bytes per (model, codec) — gated as a CEILING:
+    the compressed version store regresses when a codec re-inflates the
+    ring (bytes are deterministic functions of the layout, so any real
+    growth is a code change, not noise)."""
+    out = {}
+    for model, rec in doc.get("records", {}).items():
+        if not isinstance(rec, dict):
+            continue
+        for codec, crec in rec.items():
+            v = crec.get("bytes_per_device") if isinstance(crec, dict) \
+                else None
+            if v is not None:
+                out[f"ring_memory/{model}/{codec}/bytes_per_device"] = \
+                    float(v)
+    return out
+
+
 def population_rss(doc: dict) -> Dict[str, float]:
     """Peak-RSS growth across the device N sweep — gated as a CEILING:
     the flat-in-N host-memory contract regresses when it grows, not when
@@ -218,6 +239,7 @@ def main() -> None:
         ("BENCH_serve.json", serve_metrics, "throughput"),
         ("BENCH_population_scale.json", population_metrics, "throughput"),
         ("BENCH_population_scale.json", population_rss, "ceiling"),
+        ("BENCH_ring_memory.json", ring_memory_bytes, "ceiling"),
     )
     failures: List[str] = []
     missing = 0

@@ -44,8 +44,14 @@ def run_metadata() -> Dict[str, object]:
     ``backend``/``device_kind`` to refuse cross-backend comparisons —
     absolute events/sec figures are meaningless across hardware classes.
     ``peak_rss_mb`` records the host high-water mark at stamp time (the
-    benches stamp at exit, so it covers the whole run)."""
+    benches stamp at exit, so it covers the whole run).
+    ``ring_codec`` / ``ring_bytes_per_device`` record the active
+    compressed-version-store configuration of the last ring the process
+    built (``core/version_store.ring_provenance``; null when the bench
+    never built one) so every BENCH_*.json says which ring layout its
+    numbers were measured under."""
     devices = jax.devices()
+    from repro.core.version_store import ring_provenance
     return {
         "jax_version": jax.__version__,
         "backend": jax.default_backend(),
@@ -56,6 +62,7 @@ def run_metadata() -> Dict[str, object]:
         "peak_rss_mb": round(peak_rss_mb(), 1),
         "timestamp_utc": datetime.datetime.now(
             datetime.timezone.utc).isoformat(timespec="seconds"),
+        **ring_provenance(),
     }
 
 

@@ -8,6 +8,7 @@
   shard_scale sharded round substrate: device-count sweep (forced-host CPU)
   population_scale  device-resident population engine: N sweep to 1e6 clients
   serve       always-on serving loop: sustained uploads/sec, p99 round latency
+  ring_memory compressed version store: codec x model ring-bytes sweep
   roofline    §Roofline table from the dry-run artifacts (analytic terms)
 
 ``python -m benchmarks.run`` runs everything in quick mode (CPU-friendly);
@@ -21,7 +22,8 @@ import time
 
 
 KNOWN = ("fig1", "ablation", "buffer_k", "kernels", "server", "sim_engine",
-         "shard_scale", "population_scale", "serve", "roofline")
+         "shard_scale", "population_scale", "serve", "ring_memory",
+         "roofline")
 
 
 def main() -> None:
@@ -68,6 +70,10 @@ def main() -> None:
         from benchmarks import bench_serve
         jobs.append(("serve (always-on serving loop)",
                      lambda: bench_serve.run(quick=quick)))
+    if args.only in (None, "ring_memory"):
+        from benchmarks import bench_ring_memory
+        jobs.append(("ring_memory (compressed version store)",
+                     lambda: bench_ring_memory.run(quick=quick)))
     if args.only in (None, "roofline"):
         from benchmarks import roofline
         jobs.append(("roofline", roofline.main))

@@ -13,6 +13,14 @@ but only process 0 touches the filesystem. The engine's state
 (``sim/engine.py::engine_state_to_tree``) is identical on every process
 by the multi-controller determinism contract, so the coordinator's file
 is the global truth.
+
+Compressed version rings (``core/version_store.py``, DESIGN.md §11)
+serialize through the same keypath flattening: the f32 codec's ring is
+the bare ``['ring']`` (R, Np) f32 entry — byte-compatible with every
+pre-codec checkpoint — while int8/delta rings nest a dict of arrays
+(``['ring']['codes']``, ``['ring']['scale']``, ...) stamped with the
+codec name, restored bit-identically by ``init_version_ring(rows=...)``
+which raises a codec-aware layout error on mismatch.
 """
 from __future__ import annotations
 

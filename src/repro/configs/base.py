@@ -160,6 +160,12 @@ class FLConfig:
     # Pallas kernel on TPU and the pure-jnp reference body elsewhere
     server_pass_mode: str = "auto"  # auto | reference | batched | fused
     server_pass_block_n: int = 0  # kernel N-tile; 0 = auto (lane-aligned)
+    # compressed version store (core/version_store.py, DESIGN.md §11)
+    ring_codec: str = "f32"  # f32 | int8 | delta (version_store.CODECS)
+    ring_qblock: int = 256  # int8: params per affine quantization block
+    ring_delta_density: float = 0.05  # delta: kept residual fraction of Np
+    ring_base_refresh: int = 0  # delta: ring writes between base-snapshot
+    # refreshes; 0 = every R = max_staleness + 1 writes (one ring lap)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -60,6 +60,7 @@ from typing import NamedTuple
 
 from repro.configs.base import FLConfig
 from repro.core.client import make_local_update_fn
+from repro.core.version_store import resolve_codec
 from repro.core.server_pass import (
     apply_server_round,
     flatten_stacked,
@@ -136,13 +137,18 @@ def make_round_body(loss_fn: Callable, fl: FLConfig, *,
     def body(params, bases, batch, probe, data_sizes, taus, *,
              client_params: Optional[Any] = None,
              arrival_mask: Optional[jnp.ndarray] = None,
-             flat_bases: bool = False, return_flat: bool = False):
+             flat_bases: bool = False, return_flat: bool = False,
+             sq_dists: Optional[jnp.ndarray] = None):
         """``flat_bases=True`` takes ``bases`` as the (K, n_padded) flat
         rows the sharded version ring stores (DESIGN.md §6) instead of a
         stacked pytree; ``return_flat=True`` replaces the ``end_params``
         return slot with the (n_padded,) flat new-params vector so the
         engine's ring write never leaves flat space (engine path only —
-        ``client_params`` must be None)."""
+        ``client_params`` must be None). ``sq_dists`` carries precomputed
+        eq. 3 distances from a compressed version store
+        (``core/version_store.py``) into ``apply_server_round`` — the
+        codec computed them against its compressed rows directly, so the
+        server pass must not recompute them from the decoded bases."""
         spec = make_flat_spec(params, fl.server_pass_block_n, mesh=mesh)
         if flat_bases:
             bases_flat = bases
@@ -162,7 +168,8 @@ def make_round_body(loss_fn: Callable, fl: FLConfig, *,
             bases_flat,
             flatten_stacked(spec, up_delta),
             losses, data_sizes, taus, fl, arrival_mask=arrival_mask,
-            mode=mode, block_n=spec.block_n, interpret=interpret, mesh=mesh)
+            mode=mode, block_n=spec.block_n, interpret=interpret, mesh=mesh,
+            sq_dists=sq_dists)
         new_params = unflatten_like(spec, new_x, params)
         if not return_flat:
             return new_params, end_params, info
@@ -191,29 +198,42 @@ def make_round_body(loss_fn: Callable, fl: FLConfig, *,
 
 def make_ring_round(loss_fn: Callable, fl: FLConfig, *,
                     mesh: Any = None) -> Callable:
-    """The engine flavour: version-ring gather -> round body -> ring write.
+    """The engine flavour: version-store gather -> round body -> store write.
 
     Returns ``ring_round(params, ring, slots, batch, probe, sizes, taus,
-    new_slot) -> (new_params, new_ring, info)``. The ring is the
-    (R, n_padded) f32 matrix of flat parameter vectors on the
-    ``ShardedFlatSpec`` layout (DESIGN.md §6): row r is version r's padded
-    flat vector, so with a mesh the ring shards as ``P(None, "model")``
-    and R versions cost ``R * n_padded / model_shards`` floats per device
-    instead of R full replicas. Base gather (``ring[slots]``) and the new
-    slot write (``.at[new_slot].set(new_x)``) both happen in flat space —
-    the round body hands back the flat new-params vector, so the write
-    skips the unflatten/flatten round-trip the pytree ring needed — and
-    the ring advances in place so a ``lax.scan`` over rounds never leaves
-    the device.
+    new_slot) -> (new_params, new_ring, info)``. ``ring`` is whatever
+    state the ``FLConfig.ring_codec`` codec keeps
+    (``core/version_store.py``, DESIGN.md §11): for the default ``f32``
+    codec the raw (R, n_padded) f32 matrix on the ``ShardedFlatSpec``
+    layout (DESIGN.md §6) — gather ``ring[slots]``, write
+    ``.at[new_slot].set(new_x)``, the bitwise pre-codec program — and a
+    codec NamedTuple (int8 codewords + scales, or sparse deltas + base)
+    otherwise. Gather/decode and the new-slot encode both happen in flat
+    space (the round body hands back the flat new-params vector), and
+    the state advances in place so a ``lax.scan`` over rounds never
+    leaves the device. Compressed codecs also hand ``apply_server_round``
+    their own eq. 3 distances (fused dequantize-distance kernel /
+    sparse expansion), so the K decoded f32 rows feed ONLY the K-client
+    local-update vmap — never a second full-width distance pass.
     """
     body = make_round_body(loss_fn, fl, mesh=mesh)
+    codec = resolve_codec(fl)
+    mode, interpret = resolve_mode(fl.server_pass_mode)
+    use_kernel = mode in ("batched", "fused")
 
     def ring_round(params, ring, slots, batch, probe, sizes, taus, new_slot):
-        bases = ring[slots]  # (K, n_padded) flat rows
+        spec = make_flat_spec(params, fl.server_pass_block_n, mesh=mesh)
+        bases = codec.decode(spec, ring, slots)  # (K, n_padded) flat rows
+        dists = None
+        if codec.precomputes_distance:  # f32 leaves eq. 3 to the server
+            # pass (the exact pre-codec program — nothing extra traced)
+            dists = codec.distance_sq(
+                spec, ring, slots, flatten_tree(spec, params), mesh=mesh,
+                use_kernel=use_kernel, interpret=interpret)
         new_params, new_x, info = body(params, bases, batch, probe, sizes,
                                        taus, flat_bases=True,
-                                       return_flat=True)
-        new_ring = ring.at[new_slot].set(new_x)
+                                       return_flat=True, sq_dists=dists)
+        new_ring = codec.encode(spec, ring, new_slot, new_x)
         return new_params, new_ring, info
 
     return ring_round

@@ -226,13 +226,25 @@ def apply_server_round(x: jnp.ndarray, bases: jnp.ndarray,
                        fl: FLConfig, *,
                        arrival_mask: Optional[jnp.ndarray] = None,
                        mode: str = "reference", block_n: int = 0,
-                       interpret: bool = False, mesh: Any = None):
+                       interpret: bool = False, mesh: Any = None,
+                       sq_dists: Optional[jnp.ndarray] = None):
     """eq. 3 + 4 + 5 on flat arrays. Returns (new_x, info dict of (K,)).
 
     x: (Np,), bases/deltas: (K, Np) — already padded to a ``block_n``
     multiple (zeros), e.g. by the FlatSpec adapter. losses/data_sizes/
     taus: (K,). ``arrival_mask`` zeroes absent cohort slots (weights AND
     the k_eff divisor), matching ``contribution_weights``.
+
+    ``sq_dists`` short-circuits eq. 3 with precomputed (K,) squared
+    distances — the compressed version store's escape hatch
+    (``core/version_store.py``: the int8 codec's fused
+    dequantize-distance kernel and the delta codec's sparse expansion
+    both produce distances WITHOUT materializing the decoded rows, so
+    recomputing them here from the decoded ``bases`` would waste the
+    codec's bandwidth win). With it set, the fused single-launch kernel
+    is skipped in favour of the two-phase weighted-sum path (its phase 0
+    IS the distance computation), and the sharded path drops its psum
+    (the codec already reduced across shards).
 
     With ``mesh`` carrying a ``model`` axis of size m > 1, the pass runs
     as a ``shard_map`` over that axis (``Np`` must be a
@@ -255,9 +267,16 @@ def apply_server_round(x: jnp.ndarray, bases: jnp.ndarray,
     if shards > 1:
         return _apply_server_round_sharded(
             x, bases, deltas, losses, p, taus, mask, fl, mode=mode,
-            block=block, interpret=interpret, mesh=mesh)
+            block=block, interpret=interpret, mesh=mesh, sq_dists=sq_dists)
 
-    if mode == "fused":
+    if sq_dists is not None:
+        dists = sq_dists.astype(jnp.float32)
+        upd, s, w = _weight_and_reduce(
+            dists, deltas, p, taus, mask, fl,
+            use_kernel=(mode in ("batched", "fused")), block=block,
+            interpret=interpret)
+        new_x = x - upd
+    elif mode == "fused":
         upd, dists, w = _ops.server_update(
             x, bases, deltas, p, taus, mask, policy=fl.weighting,
             eta_g=fl.global_lr, s_min=fl.s_min, poly_a=fl.poly_a,
@@ -314,7 +333,7 @@ def _weight_and_reduce(dists, deltas, p, taus, mask, fl: FLConfig, *,
 
 def _apply_server_round_sharded(x, bases, deltas, losses, p, taus, mask,
                                 fl: FLConfig, *, mode, block, interpret,
-                                mesh):
+                                mesh, sq_dists=None):
     """shard_map body of the round over the ``model`` axis (DESIGN.md §5).
 
     Inputs are the preprocessed arrays from ``apply_server_round`` (mask
@@ -324,28 +343,47 @@ def _apply_server_round_sharded(x, bases, deltas, losses, p, taus, mask,
     psum — so under sharding both kernel modes (``batched`` and
     ``fused``) run the two-phase tiles (``sq_dists_pallas`` +
     ``weighted_sum_pallas``) per shard; the shape of the communication
-    (one (K,) psum) is identical either way.
+    (one (K,) psum) is identical either way. Precomputed ``sq_dists``
+    (the compressed-ring codecs) arrive already globally reduced, so
+    that path carries them in replicated and skips the psum entirely —
+    the round then has NO collective beyond the final output layout.
     """
     use_kernel = mode in ("batched", "fused")
 
-    def shard_body(x_s, b_s, d_s, p_, taus_, mask_):
-        # eq. 3: per-shard partial squared distances -> ONE psum, then the
-        # shared post-distance pipeline (weighting replicated, eq. 5
-        # reducing over K) completes per-shard with no further collective
-        part = _sq_dists(x_s, b_s, use_kernel=use_kernel, block=block,
-                         interpret=interpret)
-        dists = jax.lax.psum(part, MODEL_AXIS)
-        upd, s, w = _weight_and_reduce(
-            dists, d_s, p_, taus_, mask_, fl, use_kernel=use_kernel,
-            block=block, interpret=interpret)
-        return x_s - upd, dists, s, w
+    if sq_dists is not None:
+        def shard_body_pre(x_s, d_s, p_, taus_, mask_, dists):
+            upd, s, w = _weight_and_reduce(
+                dists, d_s, p_, taus_, mask_, fl, use_kernel=use_kernel,
+                block=block, interpret=interpret)
+            return x_s - upd, dists, s, w
 
-    new_x, dists, s, w = shard_map(
-        shard_body, mesh,
-        in_specs=(P(MODEL_AXIS), P(None, MODEL_AXIS), P(None, MODEL_AXIS),
-                  P(), P(), P()),
-        out_specs=(P(MODEL_AXIS), P(), P(), P()),
-        check_rep=False)(x, bases, deltas, p, taus, mask)
+        new_x, dists, s, w = shard_map(
+            shard_body_pre, mesh,
+            in_specs=(P(MODEL_AXIS), P(None, MODEL_AXIS),
+                      P(), P(), P(), P()),
+            out_specs=(P(MODEL_AXIS), P(), P(), P()),
+            check_rep=False)(x, deltas, p, taus, mask,
+                             sq_dists.astype(jnp.float32))
+    else:
+        def shard_body(x_s, b_s, d_s, p_, taus_, mask_):
+            # eq. 3: per-shard partial squared distances -> ONE psum, then
+            # the shared post-distance pipeline (weighting replicated,
+            # eq. 5 reducing over K) completes per-shard with no further
+            # collective
+            part = _sq_dists(x_s, b_s, use_kernel=use_kernel, block=block,
+                             interpret=interpret)
+            dists = jax.lax.psum(part, MODEL_AXIS)
+            upd, s, w = _weight_and_reduce(
+                dists, d_s, p_, taus_, mask_, fl, use_kernel=use_kernel,
+                block=block, interpret=interpret)
+            return x_s - upd, dists, s, w
+
+        new_x, dists, s, w = shard_map(
+            shard_body, mesh,
+            in_specs=(P(MODEL_AXIS), P(None, MODEL_AXIS),
+                      P(None, MODEL_AXIS), P(), P(), P()),
+            out_specs=(P(MODEL_AXIS), P(), P(), P()),
+            check_rep=False)(x, bases, deltas, p, taus, mask)
     info = {"sq_dists": dists, "staleness": s, "stat_effect": p,
             "weights": w, "fresh_loss": losses}
     # multi-host contract (DESIGN.md §7): info stays FULLY REPLICATED so

@@ -176,6 +176,16 @@ class ServingController:
         self._queue_depth = self.registry.gauge("serve_queue_depth")
         self._k_gauge = self.registry.gauge("serve_k")
         self._k_gauge.set(self.k)
+        # compressed-ring config (DESIGN.md §11): the streaming path's
+        # eq. 3 state is the (max_staleness,) SCALAR update-norm ring —
+        # O(R) bytes independent of model size, so the codec changes
+        # nothing here; the active codec + ring bytes are exported as
+        # registry series so serving telemetry stays comparable with
+        # engine runs of the same FLConfig
+        self.ring_codec = fl.ring_codec
+        self.registry.gauge("serve_update_norm_ring_bytes",
+                            codec=fl.ring_codec).set(
+            float(self.update_norm_ring.nbytes))
         self._latency_hist = self.registry.histogram(
             "serve_round_latency_seconds")
         self._round_wall_open: Optional[float] = None  # tracer clock

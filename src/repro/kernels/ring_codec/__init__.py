@@ -1,0 +1,16 @@
+"""Fused dequantize-distance kernels for the compressed version ring.
+
+``core/version_store.py`` stores ring rows as int8 codewords + per-block
+affine (scale, zero) pairs; the eq. 3 staleness distance against those
+rows is computed here WITHOUT materializing the K decoded f32 rows —
+each VMEM tile is dequantized in-register and folded straight into the
+per-client partial squared distance (``kernel.int8_sq_dists_pallas``),
+or via the pure-jnp reference (``ref.int8_sq_dists_ref``) everywhere a
+Mosaic program can't compile. ``ops.int8_sq_dists`` is the public
+dispatcher mirroring ``kernels/weighted_agg/ops.py``.
+"""
+from repro.kernels.ring_codec.ops import int8_sq_dists  # noqa: F401
+from repro.kernels.ring_codec.ref import (  # noqa: F401
+    dequant_ref,
+    int8_sq_dists_ref,
+)

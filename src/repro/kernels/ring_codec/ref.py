@@ -1,0 +1,30 @@
+"""jnp oracle for the int8 dequantize-distance path (CPU-everywhere).
+
+The reference DOES materialize the (K, N) dequantized rows — that is the
+memory cost the Pallas kernel exists to avoid — but it defines the exact
+arithmetic the kernel must reproduce, and it is what non-TPU backends
+run (same role as ``kernels/weighted_agg/ref.py``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dequant_ref(codes: jnp.ndarray, scales: jnp.ndarray,
+                zeros: jnp.ndarray, qblock: int) -> jnp.ndarray:
+    """codes: (K, N) int8, scales/zeros: (K, N // qblock) f32 -> (K, N) f32.
+
+    Per-block affine decode: ``row[b*qblock + j] = q * scale[b] + zero[b]``.
+    """
+    k, n = codes.shape
+    q = codes.astype(jnp.float32).reshape(k, n // qblock, qblock)
+    deq = q * scales[..., None] + zeros[..., None]
+    return deq.reshape(k, n)
+
+
+def int8_sq_dists_ref(x: jnp.ndarray, codes: jnp.ndarray,
+                      scales: jnp.ndarray, zeros: jnp.ndarray,
+                      qblock: int) -> jnp.ndarray:
+    """x: (N,) f32 vs K quantized rows -> (K,) ||x - dequant(row_k)||^2."""
+    diff = dequant_ref(codes, scales, zeros, qblock) - x[None]
+    return jnp.sum(diff * diff, axis=1)

@@ -71,6 +71,12 @@ def main() -> None:
     ap.add_argument("--max-staleness", type=int, default=12)
     ap.add_argument("--local-steps", type=int, default=1)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ring-codec", default="f32",
+                    choices=("f32", "int8", "delta"),
+                    help="version-store codec (core/version_store.py); the "
+                         "streaming path keeps only the O(R) scalar "
+                         "update-norm ring, so this is provenance + parity "
+                         "with engine runs of the same FLConfig")
     # serving knobs
     ap.add_argument("--queue-capacity", type=int, default=64)
     ap.add_argument("--service-time", type=float, default=0.0,
@@ -116,7 +122,7 @@ def main() -> None:
     fl = FLConfig(num_clients=args.clients, buffer_size=args.buffer_k,
                   max_staleness=args.max_staleness,
                   local_steps=args.local_steps, batch_size=args.batch,
-                  weighting=args.weighting)
+                  weighting=args.weighting, ring_codec=args.ring_codec)
     cfg = ServeConfig(queue_capacity=args.queue_capacity,
                       service_time=args.service_time,
                       target_round_latency=args.target_latency,

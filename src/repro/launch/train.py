@@ -89,6 +89,11 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--weighting", default="paper")
+    ap.add_argument("--ring-codec", default="f32",
+                    choices=("f32", "int8", "delta"),
+                    help="version-store codec (core/version_store.py, "
+                         "DESIGN.md §11) — int8/delta shrink the R-deep "
+                         "version ring for large models")
     ap.add_argument("--ckpt", default=None,
                     help="checkpoint path (coordinator-gated: only "
                          "process 0 writes)")
@@ -116,7 +121,7 @@ def main() -> None:
     seq = args.seq if args.smoke else shape.seq_len
     b = args.batch if args.smoke else shape.global_batch // cohort
     fl = FLConfig(buffer_size=args.buffer_k, local_steps=2, local_lr=5e-3,
-                  weighting=args.weighting)
+                  weighting=args.weighting, ring_codec=args.ring_codec)
     model = build_model(cfg)
     mesh = make_host_mesh()
     latency = LatencyModel.heterogeneous(cohort, seed=0)

@@ -74,6 +74,30 @@ def ring_pspec() -> P:
     return flat_stacked_pspec()
 
 
+def ring_codes_pspec() -> P:
+    """(R, Np) int8 codewords of the compressed version ring.
+
+    The ``int8`` codec (core/version_store.py, DESIGN.md §11) stores each
+    ring row as Np codewords on the SAME flat layout as the f32 ring, so
+    the codeword matrix shards exactly like it: versions replicated, the
+    flat dim over ``model``. Delegates to ``flat_stacked_pspec`` so the
+    compressed and identity layouts can never drift.
+    """
+    return flat_stacked_pspec()
+
+
+def ring_scales_pspec() -> P:
+    """(R, Np // qblock) per-block scale/zero arrays: blocks over ``model``.
+
+    ``resolve_qblock`` guarantees the quantization block divides the
+    per-shard tile, so the block axis partitions evenly over ``model``
+    and every device holds exactly the (scale, zero) columns its codeword
+    slice needs — the fused dequantize-distance kernel never reads a
+    remote scale.
+    """
+    return flat_stacked_pspec()
+
+
 def kclient_pspec() -> P:
     """(K, ...) client-stacked leaves: K over ``data``, rest replicated.
 

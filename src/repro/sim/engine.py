@@ -69,13 +69,12 @@ from repro.obs.trace import (
 )
 from repro.core.round_body import make_ring_round
 from repro.core.server_pass import flatten_tree, make_flat_spec
+from repro.core.version_store import build_ring, ring_state_to_host
 from repro.launch.multihost import (
     fetch_replicated,
     mesh_spans_processes,
     put_replicated,
-    put_with_sharding,
 )
-from repro.sharding.specs import ring_pspec
 from repro.sim.base import (  # noqa: F401  (re-exported for callers)
     SimResult,
     history_from_arrays,
@@ -93,38 +92,29 @@ from repro.sim.traces import EventTrace
 
 def init_version_ring(init_params: Any, fl: FLConfig, *,
                       mesh: Optional[Any] = None, shard_ring: bool = True,
-                      rows: Optional[np.ndarray] = None):
-    """Build the device-resident version ring: (R, n_padded) f32 rows.
+                      rows: Optional[Any] = None):
+    """Build the device-resident version store (``core/version_store.py``).
 
     Each of the R = max_staleness + 1 retained versions is one padded
     flat parameter vector on the ``make_flat_spec`` layout (DESIGN.md
-    §6). With a mesh whose ``model`` axis has size m > 1 the ring is
-    placed ``P(None, "model")`` — per device it costs
-    ``R * n_padded / m`` floats instead of R full replicas; on a
-    process-spanning mesh (DESIGN.md §7) each PROCESS holds only its
-    model slice of every row. ``shard_ring=False`` keeps the same flat
-    layout but replicates the rows (the bit-parity reference the
-    multi-device tests pin against). ``rows`` restores the ring from a
-    checkpointed (R, n_padded) host matrix instead of broadcasting the
-    initial params. Returns ``(spec, ring)``.
+    §6), stored by the ``fl.ring_codec`` codec (DESIGN.md §11): the
+    default ``f32`` keeps the raw (R, n_padded) f32 matrix — bit-
+    compatible with every pre-codec caller of this function — while
+    ``int8`` / ``delta`` keep a compressed NamedTuple state. With a mesh
+    whose ``model`` axis has size m > 1 the state is placed on the
+    codec's pspecs (f32/int8 rows ``P(None, "model")`` — per device
+    ``R * n_padded / m`` (bytes-per-param-scaled) instead of R full
+    replicas; on a process-spanning mesh (DESIGN.md §7) each PROCESS
+    holds only its model slice of every row). ``shard_ring=False`` keeps
+    the same layout but replicates (the bit-parity reference the
+    multi-device tests pin against). ``rows`` restores from the
+    checkpointed host representation (``version_store.ring_state_to_host``)
+    instead of encoding the initial params; a codec or layout mismatch
+    raises naming the codec and its expected layout. Returns
+    ``(spec, ring)``.
     """
-    spec = make_flat_spec(init_params, fl.server_pass_block_n, mesh=mesh)
-    ring_depth = fl.max_staleness + 1
-    if rows is None:
-        flat = flatten_tree(spec, init_params)
-        ring = jnp.broadcast_to(flat[None], (ring_depth, spec.n_padded)) * 1
-    else:
-        if tuple(rows.shape) != (ring_depth, spec.n_padded):
-            raise ValueError(
-                f"checkpointed ring shape {tuple(rows.shape)} does not match "
-                f"this run's layout {(ring_depth, spec.n_padded)} — same "
-                "model/fl config required to resume")
-        ring = jnp.asarray(rows, jnp.float32)
-    if mesh is not None:
-        pspec = (ring_pspec() if shard_ring and getattr(
-            spec, "model_shards", 1) > 1 else jax.sharding.PartitionSpec())
-        ring = put_with_sharding(ring, mesh, pspec)
-    return spec, ring
+    return build_ring(init_params, fl, mesh=mesh, shard_ring=shard_ring,
+                      rows=rows)
 
 
 class EngineState(NamedTuple):
@@ -144,7 +134,9 @@ class EngineState(NamedTuple):
     base_version: np.ndarray  # (n,) int64
     events: Tuple[Tuple[float, int], ...]  # pending (t, cid) uploads
     params: Any  # host pytree
-    ring: np.ndarray  # (R, n_padded) f32
+    ring: Any  # codec host state: (R, n_padded) f32 matrix for the f32
+    # codec (pre-codec byte layout), dict of arrays for int8/delta
+    # (version_store.ring_state_to_host)
     behavior: Dict[str, np.ndarray]
     dataset_rng: np.ndarray  # (n, 6) uint64 ClientDataset batch streams
     history: List[Dict]
@@ -161,7 +153,11 @@ def engine_state_to_tree(state: EngineState) -> Dict[str, Any]:
         "base_version": np.asarray(state.base_version, np.int64),
         "events": ev,
         "params": state.params,
-        "ring": np.asarray(state.ring, np.float32),
+        # f32 codec: the bare (R, Np) matrix (existing checkpoints stay
+        # byte-compatible); compressed codecs: a stamped dict of arrays
+        # (ckpt.py keypath-flattens nested dicts)
+        "ring": (dict(state.ring) if isinstance(state.ring, dict)
+                 else np.asarray(state.ring, np.float32)),
         "behavior": dict(state.behavior),
         "dataset_rng": np.asarray(state.dataset_rng, np.uint64),
         "round_log": round_log_to_arrays(state.round_log),
@@ -179,7 +175,8 @@ def engine_state_from_tree(tree: Dict[str, Any]) -> EngineState:
         base_version=np.asarray(tree["base_version"], np.int64),
         events=tuple((float(t), int(c)) for t, c in ev),
         params=tree["params"],
-        ring=np.asarray(tree["ring"], np.float32),
+        ring=(dict(tree["ring"]) if isinstance(tree["ring"], dict)
+              else np.asarray(tree["ring"], np.float32)),
         behavior=dict(tree["behavior"]),
         dataset_rng=np.asarray(tree["dataset_rng"], np.uint64),
         history=history_from_arrays(tree["history"]),
@@ -489,7 +486,7 @@ def run_vectorized(loss_fn: Callable, init_params: Any, clients: Sequence,
                 base_version=base_version.copy(),
                 events=tuple(sorted(events)),
                 params=fetch_replicated(params),
-                ring=np.asarray(fetch_replicated(ring), np.float32),
+                ring=ring_state_to_host(fl, fetch_replicated(ring)),
                 behavior=beh.get_state(),
                 dataset_rng=np.stack([c.rng_state() for c in clients]),
                 history=[dict(h) for h in history],

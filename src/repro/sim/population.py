@@ -61,6 +61,7 @@ import numpy as np
 
 from repro.configs.base import FLConfig
 from repro.core.round_body import make_ring_round
+from repro.core.version_store import ring_state_to_host
 from repro.data.synthetic import ClientDataset
 from repro.launch.multihost import (
     fetch_replicated,
@@ -887,7 +888,8 @@ class PopulationEngineState(NamedTuple):
     batch_k: np.ndarray       # (N,) i32
     base_version: np.ndarray  # (N,) i32
     params: Any               # host pytree
-    ring: np.ndarray          # (R, n_padded) f32
+    ring: Any                 # codec host state: (R, n_padded) f32 for the
+    # f32 codec, dict of arrays for int8/delta (version_store)
     history: List[Dict]
     round_log: List[Dict]
 
@@ -903,7 +905,8 @@ def population_state_to_tree(state: PopulationEngineState) -> Dict[str, Any]:
         "batch_k": np.asarray(state.batch_k, np.int32),
         "base_version": np.asarray(state.base_version, np.int32),
         "params": state.params,
-        "ring": np.asarray(state.ring, np.float32),
+        "ring": (dict(state.ring) if isinstance(state.ring, dict)
+                 else np.asarray(state.ring, np.float32)),
         "round_log": round_log_to_arrays(state.round_log),
         "history": history_to_arrays(state.history),
     }
@@ -920,7 +923,8 @@ def population_state_from_tree(tree: Dict[str, Any]) -> PopulationEngineState:
         batch_k=np.asarray(tree["batch_k"], np.int32),
         base_version=np.asarray(tree["base_version"], np.int32),
         params=tree["params"],
-        ring=np.asarray(tree["ring"], np.float32),
+        ring=(dict(tree["ring"]) if isinstance(tree["ring"], dict)
+              else np.asarray(tree["ring"], np.float32)),
         history=history_from_arrays(tree["history"]),
         round_log=round_log_from_arrays(tree["round_log"]),
     )
@@ -1105,7 +1109,7 @@ def run_population(loss_fn: Callable, init_params: Any,
                 batch_k=np.asarray(state_h.batch_k, np.int32),
                 base_version=np.asarray(state_h.base_version, np.int32),
                 params=_fetch(params),
-                ring=np.asarray(_fetch(ring), np.float32),
+                ring=ring_state_to_host(fl, _fetch(ring)),
                 history=[dict(h) for h in history],
                 round_log=[dict(r) for r in round_log])
     return SimResult(history=history, server_rounds=version, sim_time=now,
