@@ -2,7 +2,8 @@
 
 Compares freshly produced ``BENCH_sim_engine.json`` /
 ``BENCH_shard_scale.json`` / ``BENCH_serve.json`` /
-``BENCH_population_scale.json`` / ``BENCH_ring_memory.json`` against the
+``BENCH_transport.json`` / ``BENCH_population_scale.json`` /
+``BENCH_ring_memory.json`` against the
 COMMITTED baselines
 (``git show
 <ref>:<file>``) and exits non-zero on a real regression, so the nightly
@@ -139,6 +140,22 @@ def serve_metrics(doc: dict) -> Dict[str, float]:
     return out
 
 
+def transport_metrics(doc: dict) -> Dict[str, float]:
+    """Socket-ingress throughput per (transport, codec, mode) row plus
+    the int8/f32 wire-size ratio. Throughput rows ride the standard
+    -20% gate; the byte ratio is deterministic (same payload, same
+    codec), so a >20% drop there means the codec itself regressed."""
+    out = {}
+    for name, rec in doc.get("records", {}).items():
+        v = rec.get("uploads_per_sec") if isinstance(rec, dict) else None
+        if v is not None:
+            out[f"transport/{name}/uploads_per_sec"] = float(v)
+    r = doc.get("f32_over_int8_bytes")
+    if r is not None:
+        out["transport/f32_over_int8_bytes"] = float(r)
+    return out
+
+
 def shard_scale_launches(doc: dict) -> Dict[str, int]:
     out = {}
     for d, rec in doc.get("records", {}).items():
@@ -237,6 +254,7 @@ def main() -> None:
         ("BENCH_shard_scale.json", shard_scale_metrics, "throughput"),
         ("BENCH_shard_scale.json", shard_scale_launches, "launches"),
         ("BENCH_serve.json", serve_metrics, "throughput"),
+        ("BENCH_transport.json", transport_metrics, "throughput"),
         ("BENCH_population_scale.json", population_metrics, "throughput"),
         ("BENCH_population_scale.json", population_rss, "ceiling"),
         ("BENCH_ring_memory.json", ring_memory_bytes, "ceiling"),

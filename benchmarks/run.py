@@ -8,6 +8,7 @@
   shard_scale sharded round substrate: device-count sweep (forced-host CPU)
   population_scale  device-resident population engine: N sweep to 1e6 clients
   serve       always-on serving loop: sustained uploads/sec, p99 round latency
+  transport   socket ingress: loopback uploads/sec, offer-to-ack p99, wire bytes
   ring_memory compressed version store: codec x model ring-bytes sweep
   roofline    §Roofline table from the dry-run artifacts (analytic terms)
 
@@ -22,8 +23,8 @@ import time
 
 
 KNOWN = ("fig1", "ablation", "buffer_k", "kernels", "server", "sim_engine",
-         "shard_scale", "population_scale", "serve", "ring_memory",
-         "roofline")
+         "shard_scale", "population_scale", "serve", "transport",
+         "ring_memory", "roofline")
 
 
 def main() -> None:
@@ -70,6 +71,10 @@ def main() -> None:
         from benchmarks import bench_serve
         jobs.append(("serve (always-on serving loop)",
                      lambda: bench_serve.run(quick=quick)))
+    if args.only in (None, "transport"):
+        from benchmarks import bench_transport
+        jobs.append(("transport (socket serving ingress)",
+                     lambda: bench_transport.run(quick=quick)))
     if args.only in (None, "ring_memory"):
         from benchmarks import bench_ring_memory
         jobs.append(("ring_memory (compressed version store)",

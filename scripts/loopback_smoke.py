@@ -1,0 +1,152 @@
+"""CI loopback smoke: real transport end to end, gated on parity.
+
+Boots ``serve_fl`` with a REAL socket ingress (``--transport http`` by
+default — the slowest, most header-sensitive path), points N separate
+``client_fl`` PROCESSES at it via ``--port-file`` discovery, and gates
+on the §12 acceptance criteria:
+
+* **fold-journal parity** — the live concurrent run records every fold
+  (client, draw seq, base version, payload sha) in fold order;
+  ``serve_fl --replay-journal`` re-folds that stream in-process from
+  the seeded datasets and must land on the byte-identical
+  ``params_sha256`` (the deterministic twin of a racy live run);
+* **trace validity** — the server's ``--trace-out`` artifact passes
+  ``scripts/validate_trace.py`` (schema + >= --min-coverage of round
+  wall-time accounted for by collect_window/apply spans), now with the
+  transport decode/offer spans riding along.
+
+Client processes that lose the shutdown race (the server exits once
+``--rounds`` is reached; a client mid-pull gets a connection error) are
+tolerated — the gate is the digest + the trace, not client exit codes.
+
+Usage (the CI fast lane):
+    PYTHONPATH=src python scripts/loopback_smoke.py
+    PYTHONPATH=src python scripts/loopback_smoke.py --transport tcp
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _env() -> dict:
+    env = dict(os.environ)
+    src = os.path.join(ROOT, "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--transport", default="http",
+                    choices=("tcp", "http"))
+    ap.add_argument("--num-clients", type=int, default=4,
+                    help="client PROCESSES to launch")
+    ap.add_argument("--population", type=int, default=8,
+                    help="scenario population (--clients on both sides)")
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--buffer-k", type=int, default=2)
+    ap.add_argument("--timeout", type=float, default=240.0,
+                    help="per-process wait budget (jax import dominates)")
+    ap.add_argument("--min-coverage", type=float, default=0.95)
+    args = ap.parse_args()
+
+    tmp = tempfile.mkdtemp(prefix="loopback_smoke_")
+    port_file = os.path.join(tmp, "port")
+    journal = os.path.join(tmp, "folds.jsonl")
+    trace = os.path.join(tmp, "serve_trace.json")
+    common = ["--clients", str(args.population), "--seed", "0"]
+    try:
+        srv_cmd = [sys.executable, "-m", "repro.launch.serve_fl",
+                   "--transport", args.transport, "--port", "0",
+                   "--port-file", port_file,
+                   "--rounds", str(args.rounds),
+                   "--buffer-k", str(args.buffer_k),
+                   "--adapt-every", "0",  # journal parity needs fixed K
+                   "--max-staleness", "100",
+                   "--journal-out", journal, "--trace-out", trace,
+                   "--max-wall-time", str(args.timeout / 2),
+                   "--json", "--log-level", "info"] + common
+        print(f"[smoke] server: {' '.join(srv_cmd)}")
+        srv = subprocess.Popen(srv_cmd, cwd=ROOT, env=_env(),
+                               stdout=subprocess.PIPE, text=True)
+
+        clients = []
+        for cid in range(args.num_clients):
+            c_cmd = [sys.executable, "-m", "repro.launch.client_fl",
+                     "--port-file", port_file,
+                     "--transport", args.transport,
+                     "--cid", str(cid), "--uploads", "16",
+                     "--stop-at-version", str(args.rounds),
+                     "--port-wait", str(args.timeout / 2),
+                     "--log-level", "warning"] + common
+            clients.append(subprocess.Popen(c_cmd, cwd=ROOT, env=_env(),
+                                            stdout=subprocess.PIPE,
+                                            text=True))
+        for cid, c in enumerate(clients):
+            try:
+                out, _ = c.communicate(timeout=args.timeout)
+            except subprocess.TimeoutExpired:
+                c.kill()
+                print(f"[smoke] FAIL: client {cid} hung")
+                return 1
+            # shutdown-race losers are fine; a hung client is not
+            print(f"[smoke] client {cid} exit={c.returncode}: "
+                  f"{out.strip().splitlines()[-1] if out.strip() else ''}")
+        try:
+            srv_out, _ = srv.communicate(timeout=args.timeout)
+        except subprocess.TimeoutExpired:
+            srv.kill()
+            print("[smoke] FAIL: server never reached the round target")
+            return 1
+        if srv.returncode != 0:
+            print(f"[smoke] FAIL: server exit={srv.returncode}")
+            return 1
+        live = json.loads(srv_out)
+        print(f"[smoke] live: version={live['version']} "
+              f"folded={live['folded']} sha={live['params_sha256'][:16]}")
+        if live["version"] < args.rounds:
+            print("[smoke] FAIL: wall-time bound hit before the round "
+                  f"target ({live['version']} < {args.rounds})")
+            return 1
+
+        replay_cmd = [sys.executable, "-m", "repro.launch.serve_fl",
+                      "--replay-journal", journal,
+                      "--buffer-k", str(args.buffer_k),
+                      "--max-staleness", "100",
+                      "--json", "--log-level", "warning"] + common
+        replay = json.loads(subprocess.run(
+            replay_cmd, cwd=ROOT, env=_env(), capture_output=True,
+            text=True, timeout=args.timeout, check=True).stdout)
+        print(f"[smoke] replay: version={replay['version']} "
+              f"folded={replay['replayed']} "
+              f"sha={replay['params_sha256'][:16]}")
+        if replay["params_sha256"] != live["params_sha256"]:
+            print("[smoke] FAIL: journal replay digest != live digest — "
+                  "the socket path and the in-process twin diverged")
+            return 1
+        print("[smoke] parity OK: replay digest == live digest")
+
+        rc = subprocess.run(
+            [sys.executable, os.path.join(ROOT, "scripts",
+                                          "validate_trace.py"),
+             trace, "--min-coverage", str(args.min_coverage)],
+            cwd=ROOT, env=_env(), timeout=args.timeout).returncode
+        if rc != 0:
+            print("[smoke] FAIL: trace validation")
+            return 1
+        print("[smoke] PASS")
+        return 0
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -52,7 +52,9 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Callable, Deque, Dict, List, NamedTuple, Optional, Tuple
+import threading
+from typing import (Any, Callable, Deque, Dict, List, Optional, Protocol,
+                    Tuple, runtime_checkable)
 
 import jax
 import jax.numpy as jnp
@@ -88,9 +90,45 @@ class ServeConfig:
     adapt_gain: float = 0.5  # damping toward K* = lambda_hat * target
     arrival_ewma: float = 0.2  # EWMA factor of the inter-arrival estimate
     retry_after_min: float = 0.1  # floor on the advertised backoff
+    # ceiling on the advertised backoff: the drain-time hint is linear in
+    # queue depth, so without a clamp a deep queue at a slow modeled
+    # service rate would tell a WALL-CLOCK client to sleep unboundedly
+    retry_after_max: float = 30.0
 
 
-class Upload(NamedTuple):
+# -- wire-able pytrees --------------------------------------------------
+# Upload/Admission travel over the transport (DESIGN.md §12) as a
+# JSON-able meta dict plus a flat {name: ndarray} tensor map; the byte
+# encoding (framing, payload codec) lives in transport/wire.py so this
+# module never learns about sockets. A pytree of arrays becomes a
+# JSON-able skeleton whose leaves are {"__tensor__": name} references.
+
+def tree_to_wire(prefix: str, tree: Any,
+                 tensors: Dict[str, np.ndarray]) -> Any:
+    """JSON-able skeleton of ``tree``; array leaves land in ``tensors``."""
+    if isinstance(tree, dict):
+        return {"__dict__": {k: tree_to_wire(f"{prefix}.{k}", v, tensors)
+                             for k, v in sorted(tree.items())}}
+    if isinstance(tree, (list, tuple)):
+        return {"__tuple__": [tree_to_wire(f"{prefix}.{i}", v, tensors)
+                              for i, v in enumerate(tree)]}
+    arr = np.asarray(tree)
+    tensors[prefix] = arr
+    return {"__tensor__": prefix}
+
+
+def tree_from_wire(skel: Any, tensors: Dict[str, np.ndarray]) -> Any:
+    """Inverse of ``tree_to_wire`` (tuples come back as tuples)."""
+    if "__tensor__" in skel:
+        return tensors[skel["__tensor__"]]
+    if "__dict__" in skel:
+        return {k: tree_from_wire(v, tensors)
+                for k, v in skel["__dict__"].items()}
+    return tuple(tree_from_wire(v, tensors) for v in skel["__tuple__"])
+
+
+@dataclasses.dataclass(frozen=True)
+class Upload:
     """One client upload as the ingress queue holds it.
 
     The streaming mapping folds the local training server-side (the
@@ -98,20 +136,114 @@ class Upload(NamedTuple):
     batches rather than a precomputed delta; ``base_version`` is the
     global version the client pulled, from which the controller derives
     staleness at FOLD time (it grows while the upload queues).
+
+    Field-by-field (the wire schema mirrors these, DESIGN.md §12):
+
+    * ``client_id`` — stable integer identity of the uploading client;
+    * ``base_version`` — the global model version the client pulled and
+      trained from (staleness = controller version - base_version);
+    * ``data_size`` — |D_i|, the client's sample count (eq. 5 weight);
+    * ``batch`` — (M, b, ...) stacked local-step batches, any pytree of
+      arrays;
+    * ``probe`` — (bp, ...) eq.-4 fresh-loss probe batch, any pytree;
+    * ``sent_at`` — seconds on the SERVICE clock when the upload reached
+      the endpoint (sim-seconds on the scenario clock, wall-clock
+      seconds behind a real transport);
+    * ``seq`` — client-local draw index of this upload (0, 1, 2, ...;
+      a queue-full retry re-offers the SAME seq). Lets the loopback
+      parity replay reconstruct a concurrent run's fold stream from
+      seeded client datasets; -1 when the producer doesn't track it.
     """
 
     client_id: int
     base_version: int
     data_size: float
-    batch: Any  # (M, b, ...) stacked local-step batches
-    probe: Any  # (bp, ...) eq.-4 fresh-loss probe batch
-    sent_at: float  # sim-time the upload arrived at the endpoint
+    batch: Any
+    probe: Any
+    sent_at: float
+    seq: int = -1
+
+    def to_wire(self) -> Tuple[Dict[str, Any], Dict[str, np.ndarray]]:
+        """(JSON-able meta, flat tensor map) — transport/wire.py encodes
+        these into one length-prefixed frame."""
+        tensors: Dict[str, np.ndarray] = {}
+        meta = {
+            "client_id": int(self.client_id),
+            "base_version": int(self.base_version),
+            "data_size": float(self.data_size),
+            "sent_at": float(self.sent_at),
+            "seq": int(self.seq),
+            "batch": tree_to_wire("batch", self.batch, tensors),
+            "probe": tree_to_wire("probe", self.probe, tensors),
+        }
+        return meta, tensors
+
+    @classmethod
+    def from_wire(cls, meta: Dict[str, Any],
+                  tensors: Dict[str, np.ndarray]) -> "Upload":
+        return cls(client_id=int(meta["client_id"]),
+                   base_version=int(meta["base_version"]),
+                   data_size=float(meta["data_size"]),
+                   batch=tree_from_wire(meta["batch"], tensors),
+                   probe=tree_from_wire(meta["probe"], tensors),
+                   sent_at=float(meta["sent_at"]),
+                   seq=int(meta.get("seq", -1)))
 
 
-class Admission(NamedTuple):
+@dataclasses.dataclass(frozen=True)
+class Admission:
+    """The admission-control verdict for one ``offer``.
+
+    * ``accepted`` — True iff the upload entered the ingress queue;
+    * ``reason`` — ADMITTED / REJECT_QUEUE_FULL / DROP_MAX_STALENESS;
+    * ``retry_after`` — backoff hint in seconds on the SAME clock the
+      caller passed as ``now`` (sim-seconds on the scenario clock,
+      wall-clock seconds over a real transport); > 0 only for
+      REJECT_QUEUE_FULL, and clamped to ``ServeConfig.retry_after_max``
+      so a wall-clock client never sleeps unboundedly on a deep queue.
+    """
+
     accepted: bool
-    reason: str  # ADMITTED / REJECT_QUEUE_FULL / DROP_MAX_STALENESS
-    retry_after: float  # backoff hint, > 0 only for REJECT_QUEUE_FULL
+    reason: str
+    retry_after: float
+
+    def to_wire(self) -> Dict[str, Any]:
+        return {"accepted": bool(self.accepted), "reason": self.reason,
+                "retry_after": float(self.retry_after)}
+
+    @classmethod
+    def from_wire(cls, meta: Dict[str, Any]) -> "Admission":
+        return cls(accepted=bool(meta["accepted"]),
+                   reason=str(meta["reason"]),
+                   retry_after=float(meta["retry_after"]))
+
+
+@runtime_checkable
+class AggregatorService(Protocol):
+    """The aggregation endpoint, as its CLIENTS see it (DESIGN.md §12).
+
+    Three methods, deliberately transport-shaped: they are exactly the
+    RPCs of the wire schema, so the in-process twin (``sim/arrivals.py``
+    driving a ``ServingController`` directly — the deterministic CI
+    path) and the socket path (``transport/client.py::RemoteAggregator``
+    speaking to ``transport/server.py``) are interchangeable behind one
+    type. ``core/serving.py`` never learns about sockets; the transport
+    never learns about folding.
+
+    * ``offer(upload, now)`` — submit one upload for admission; ``now``
+      is the caller's clock reading (sim or wall seconds — whatever
+      clock the service runs on);
+    * ``pull()`` — ``(version, params)`` of the CURRENT served model
+      (the client trains from this and stamps ``base_version``);
+    * ``snapshot()`` — the service's metrics dict (telemetry only; no
+      aggregation state).
+    """
+
+    def offer(self, upload: Upload, now: float) -> Admission: ...
+
+    def pull(self) -> Tuple[int, Any]: ...
+
+    def snapshot(self) -> Dict[str, Any]: ...
 
 
 class ServingController:
@@ -122,6 +254,30 @@ class ServingController:
     ``apply`` completing eq. 5) each compile exactly once because every
     device-side shape — params, accumulator, the (k_max,) v-buffer, the
     (max_staleness,) update-norm ring — is independent of the current K.
+
+    This is the in-process implementation of ``AggregatorService``
+    (``offer`` / ``pull`` / ``snapshot``); the socket path wraps it
+    without subclassing (transport/server.py).
+
+    **Thread-safety contract (DESIGN.md §12).** One internal lock
+    (``self._lock``) guards every piece of state shared between admission
+    and folding: the ingress queue, ``version``, ``params``, counters,
+    and the arrival estimator. Under it:
+
+    * ``offer`` / ``pull`` / ``snapshot`` are safe to call from ANY
+      thread (the transport's per-connection workers call them
+      concurrently);
+    * ``pump`` must only ever run on ONE thread — the aggregator thread.
+      The fold state it owns (``accum``, ``v_buf``, ``count``,
+      ``busy_until``, the tracer round bookkeeping) is single-owner by
+      design: folding stays on one thread so the jit-once ``contribute``
+      / ``apply`` programs are never raced and eq. 5's accumulation
+      order is the arrival order, deterministically. ``pump`` takes the
+      lock per fold iteration (not for its whole run), so admission
+      stays live while a long round folds.
+
+    The sim path (serve_stream) is single-threaded and pays only the
+    uncontended-lock cost.
     """
 
     def __init__(self, loss_fn: Callable, init_params: Any, fl: FLConfig,
@@ -158,6 +314,12 @@ class ServingController:
 
         self.queue: Deque[Upload] = collections.deque()
         self.busy_until = 0.0  # service-model clock (sim-time)
+        # the single lock of the thread-safety contract (class docstring)
+        self._lock = threading.RLock()
+        # transport hook: called as fold_hook(upload, tau) right after an
+        # upload folds — the fold JOURNAL the loopback parity replay
+        # consumes (launch/serve_fl.py --journal-out). None = disabled.
+        self.fold_hook: Optional[Callable[[Upload, int], None]] = None
         # private registry by default: two controllers in one process must
         # not alias series (pass a shared registry to aggregate instead)
         self.registry = registry if registry is not None else MetricsRegistry()
@@ -216,25 +378,45 @@ class ServingController:
 
     def _retry_after(self) -> float:
         """Backoff hint: the time to drain the current queue at the modeled
-        service rate (floored so zero-cost services still spread retries)."""
-        return max(self.cfg.retry_after_min,
-                   len(self.queue) * self.cfg.service_time)
+        service rate — floored so zero-cost services still spread retries,
+        and CLAMPED to ``retry_after_max`` so a deep queue never advertises
+        an unbounded sleep to a wall-clock client (Admission docstring)."""
+        return min(self.cfg.retry_after_max,
+                   max(self.cfg.retry_after_min,
+                       len(self.queue) * self.cfg.service_time))
 
     def offer(self, upload: Upload, now: float) -> Admission:
-        """Admit one upload into the bounded ingress queue."""
-        self._evict_stale()
-        if self.staleness(upload) > self.fl.max_staleness:
-            self._counters["dropped_stale_ingress"].inc()
-            return Admission(False, DROP_MAX_STALENESS, 0.0)
-        if len(self.queue) >= self.cfg.queue_capacity:
-            self._counters["rejected_queue_full"].inc()
-            return Admission(False, REJECT_QUEUE_FULL, self._retry_after())
-        self.queue.append(upload)
-        self._counters["admitted"].inc()
-        self._queue_depth.set(len(self.queue))
-        self.queue_depth_max = max(self.queue_depth_max, len(self.queue))
-        self._observe_arrival(now)
-        return Admission(True, ADMITTED, 0.0)
+        """Admit one upload into the bounded ingress queue.
+
+        Safe from any thread (AggregatorService contract)."""
+        with self._lock:
+            self._evict_stale()
+            if self.staleness(upload) > self.fl.max_staleness:
+                self._counters["dropped_stale_ingress"].inc()
+                return Admission(False, DROP_MAX_STALENESS, 0.0)
+            if len(self.queue) >= self.cfg.queue_capacity:
+                self._counters["rejected_queue_full"].inc()
+                return Admission(False, REJECT_QUEUE_FULL,
+                                 self._retry_after())
+            self.queue.append(upload)
+            self._counters["admitted"].inc()
+            self._queue_depth.set(len(self.queue))
+            self.queue_depth_max = max(self.queue_depth_max, len(self.queue))
+            self._observe_arrival(now)
+            return Admission(True, ADMITTED, 0.0)
+
+    def pull(self) -> Tuple[int, Any]:
+        """``(version, params)`` of the CURRENT served model — the model-
+        pull RPC of AggregatorService. Safe from any thread; the pair is
+        read atomically under the lock so a client never sees version N
+        with version N-1's params."""
+        with self._lock:
+            return self.version, self.params
+
+    def snapshot(self) -> Dict[str, Any]:
+        """AggregatorService telemetry: ``metrics()`` read under the lock."""
+        with self._lock:
+            return self.metrics()
 
     def _observe_arrival(self, now: float) -> None:
         if self._last_arrival is not None:
@@ -252,39 +434,49 @@ class ServingController:
     def pump(self, now: float) -> int:
         """Fold queued uploads whose service completes by ``now``; run the
         eq. 5 apply whenever the open round reaches K. Returns the number
-        of rounds applied."""
+        of rounds applied.
+
+        Single-owner: only the aggregator thread may call this (class
+        docstring). The lock is taken per fold so concurrent ``offer``
+        calls interleave between folds rather than stalling for a round.
+        """
         rounds = 0
         while True:
-            if self.count >= self.k:  # also catches K adapted downward
-                self._apply_round(max(self.busy_until, now))
-                rounds += 1
-                continue
-            if not self.queue:
-                break
-            done = max(self.busy_until, now if self.cfg.service_time == 0.0
-                       else self.queue[0].sent_at) + self.cfg.service_time
-            if self.cfg.service_time > 0.0 and done > now:
-                break  # the server is still busy; leave the rest queued
-            upload = self.queue.popleft()
-            tau = self.staleness(upload)
-            if tau > self.fl.max_staleness:  # out-aged while queued
-                self._counters["dropped_stale_queue"].inc()
-                continue
-            with self.tracer.span(SPAN_CONTRIBUTE, client=upload.client_id,
-                                  tau=tau):
-                self.accum, self.v_buf, _, _ = self._contribute(
-                    self.params, self.accum, self.update_norm_ring,
-                    self.v_buf, jnp.int32(self.count), upload.batch,
-                    upload.probe, jnp.float32(upload.data_size),
-                    jnp.int32(tau))
-            self.busy_until = done
-            if self.count == 0:
-                self._round_open_at = upload.sent_at
-                if self._round_wall_open is None:  # first-ever round
-                    self._round_wall_open = self.tracer.now()
-            self.count += 1
-            self._counters["folded"].inc()
-        self._queue_depth.set(len(self.queue))
+            with self._lock:
+                if self.count >= self.k:  # also catches K adapted downward
+                    self._apply_round(max(self.busy_until, now))
+                    rounds += 1
+                    continue
+                if not self.queue:
+                    break
+                done = max(self.busy_until,
+                           now if self.cfg.service_time == 0.0
+                           else self.queue[0].sent_at) + self.cfg.service_time
+                if self.cfg.service_time > 0.0 and done > now:
+                    break  # the server is still busy; leave the rest queued
+                upload = self.queue.popleft()
+                tau = self.staleness(upload)
+                if tau > self.fl.max_staleness:  # out-aged while queued
+                    self._counters["dropped_stale_queue"].inc()
+                    continue
+                with self.tracer.span(SPAN_CONTRIBUTE,
+                                      client=upload.client_id, tau=tau):
+                    self.accum, self.v_buf, _, _ = self._contribute(
+                        self.params, self.accum, self.update_norm_ring,
+                        self.v_buf, jnp.int32(self.count), upload.batch,
+                        upload.probe, jnp.float32(upload.data_size),
+                        jnp.int32(tau))
+                self.busy_until = done
+                if self.count == 0:
+                    self._round_open_at = upload.sent_at
+                    if self._round_wall_open is None:  # first-ever round
+                        self._round_wall_open = self.tracer.now()
+                self.count += 1
+                self._counters["folded"].inc()
+                if self.fold_hook is not None:
+                    self.fold_hook(upload, tau)
+        with self._lock:
+            self._queue_depth.set(len(self.queue))
         return rounds
 
     def _apply_round(self, t_done: float) -> None:
@@ -312,8 +504,12 @@ class ServingController:
         self._counters["rounds"].inc()
         open_at = self._round_open_at if self._round_open_at is not None \
             else t_done
-        self.round_latencies.append(t_done - open_at)
-        self._latency_hist.observe(t_done - open_at)
+        # clamped: over a live transport an upload can land DURING the
+        # pump loop with sent_at later than the loop's ``now`` — the true
+        # latency is sub-poll-interval, not negative
+        lat = max(0.0, t_done - open_at)
+        self.round_latencies.append(lat)
+        self._latency_hist.observe(lat)
         self.round_times.append(t_done)
         self._round_open_at = None
         self._round_wall_open = self.tracer.now()  # next window opens now

@@ -1,82 +1,84 @@
 """Always-on FL serving launcher: continuous-arrival aggregation rounds.
 
-Runs the ``core/serving.py`` controller as a long-lived endpoint with a
-``sim/`` scenario acting as the in-process traffic generator: client
-uploads arrive on the scenario's seeded per-client timelines, pass
-admission control (bounded ingress queue, staleness drops, queue-full
-backpressure with retry-after), and are folded through the streaming
-round body; the adaptive controller tunes buffer size K to the observed
-arrival rate to hold round cadence near ``--target-latency``.
+Runs the ``core/serving.py`` controller as a long-lived endpoint behind
+one of three ingresses (DESIGN.md §12):
 
-Everything is in-process and deterministic under ``--seed`` — no sockets
-— so the same entry point doubles as the CI serving smoke lane.
+* ``--transport inproc`` (default) — the deterministic in-process twin:
+  a ``sim/`` scenario acts as the traffic generator, client uploads
+  arrive on seeded per-client timelines, everything runs on the sim
+  clock with no sockets. This is the CI serving smoke lane.
+* ``--transport tcp`` / ``--transport http`` — a real
+  ``transport.AggregatorServer``: framed-TCP or HTTP listener threads
+  feed the controller's thread-safe offer queue while THIS thread runs
+  the single-threaded fold loop on wall-clock time. Real clients
+  (``launch/client_fl.py``) connect over loopback or the network.
 
-The observability plane (DESIGN.md §9) hangs off four flags:
+Either way uploads pass admission control (bounded ingress queue,
+staleness drops, queue-full backpressure with retry-after), fold through
+the streaming round body, and the adaptive controller tunes K toward
+``--target-latency``.
 
-* ``--trace-out t.json``    Chrome-trace spans of the round lifecycle
-                            (``collect_window``/``contribute``/``apply``)
-                            — load in perfetto / chrome://tracing; the CI
-                            smoke lane validates the schema and >= 95%
-                            round-wall-time span coverage;
-* ``--metrics-out m.jsonl`` JSONL metrics snapshots, one event every
-                            ``--flush-every`` rounds plus a final one
-                            (coordinator-gated; the nightly job uploads
-                            this as an artifact);
-* ``--profile-dir d``       with ``--profile-every N``: a windowed
-                            ``jax.profiler`` device capture every N
-                            rounds, host spans annotated onto the device
-                            timeline;
-* ``--log-level``           drives ``obs.configure_logging``.
+Loopback parity (the §12 gate): ``--journal-out j.jsonl`` records every
+fold (client, draw seq, base version, payload sha) in fold order;
+``--replay-journal j.jsonl`` reconstructs that exact fold sequence from
+the seeded datasets IN PROCESS and reports the resulting
+``params_sha256`` — byte-equal to the live transport run's digest when
+the wire (f32) and the fold math are faithful. Parity replay requires
+the live run to use ``--adapt-every 0`` (a fixed K; the adaptive
+controller's wall-clock inputs are not journaled).
 
-Example:
+The observability plane (DESIGN.md §9) hangs off the shared obs flags
+(``launch/cli.py``): ``--trace-out`` Chrome-trace spans (round
+lifecycle + transport decode/offer spans), ``--metrics-out`` JSONL
+snapshots, ``--profile-dir/--profile-every`` windowed device captures,
+``--log-level``.
+
+Examples:
   PYTHONPATH=src python -m repro.launch.serve_fl --scenario paper-fig1 \
-      --clients 32 --rounds 20 --weighting fedasync_hinge \
-      --trace-out serve_trace.json --json
+      --clients 32 --rounds 20 --weighting fedasync_hinge --json
+  PYTHONPATH=src python -m repro.launch.serve_fl --transport tcp \
+      --port 0 --port-file /tmp/port --rounds 4 --adapt-every 0 \
+      --journal-out /tmp/j.jsonl --json
 """
 from __future__ import annotations
 
 import argparse
 import json
 import logging
+import os
 import time
+from typing import Any, Dict, Optional, TextIO
 
 import jax
 
 from repro.configs.base import FLConfig
 from repro.core.serving import ServeConfig, ServingController, serve_stream
-from repro.models.lenet import init_lenet, lenet_loss
-from repro.obs import (
-    JsonlSink,
-    MetricsRegistry,
-    Tracer,
-    WindowedProfiler,
-    configure_logging,
-    emit_snapshot,
+from repro.launch.cli import (
+    ObsStack,
+    add_obs_flags,
+    add_ring_codec_flag,
+    add_scenario_flags,
 )
+from repro.models.lenet import init_lenet, lenet_loss
 from repro.sim import get_scenario
-from repro.sim.arrivals import TrafficGenerator
+from repro.sim.arrivals import TrafficGenerator, draw_upload
 
 logger = logging.getLogger("repro.launch.serve_fl")
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scenario", default="paper-fig1")
-    ap.add_argument("--clients", type=int, default=32)
-    ap.add_argument("--samples-per-client", type=int, default=64)
-    ap.add_argument("--seed", type=int, default=0)
+    add_scenario_flags(ap)
     ap.add_argument("--weighting", default="paper")
     ap.add_argument("--buffer-k", type=int, default=8,
                     help="initial K (the adaptive controller moves it)")
     ap.add_argument("--max-staleness", type=int, default=12)
     ap.add_argument("--local-steps", type=int, default=1)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--ring-codec", default="f32",
-                    choices=("f32", "int8", "delta"),
-                    help="version-store codec (core/version_store.py); the "
-                         "streaming path keeps only the O(R) scalar "
-                         "update-norm ring, so this is provenance + parity "
-                         "with engine runs of the same FLConfig")
+    add_ring_codec_flag(
+        ap, help_suffix="; the streaming path keeps only the O(R) scalar "
+                        "update-norm ring, so this is provenance + parity "
+                        "with engine runs of the same FLConfig")
     # serving knobs
     ap.add_argument("--queue-capacity", type=int, default=64)
     ap.add_argument("--service-time", type=float, default=0.0,
@@ -85,39 +87,115 @@ def main() -> None:
     ap.add_argument("--k-min", type=int, default=2)
     ap.add_argument("--k-max", type=int, default=64)
     ap.add_argument("--adapt-every", type=int, default=4,
-                    help="rounds between K adjustments (0 = fixed K)")
+                    help="rounds between K adjustments (0 = fixed K; "
+                         "required for journal parity replay)")
+    # transport ingress (DESIGN.md §12)
+    ap.add_argument("--transport", default="inproc",
+                    choices=("inproc", "tcp", "http"),
+                    help="inproc = scenario-driven deterministic twin; "
+                         "tcp/http = real socket ingress for client_fl")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="listen port (0 = ephemeral; see --port-file)")
+    ap.add_argument("--port-file", default=None,
+                    help="write the bound port here once listening "
+                         "(atomic rename), so --port 0 orchestration "
+                         "can find the server")
+    ap.add_argument("--max-wall-time", type=float, default=None,
+                    help="wall-clock bound for the transport fold loop "
+                         "(safety net when clients die early)")
+    ap.add_argument("--journal-out", default=None,
+                    help="record every fold (cid/seq/base_version/sha) "
+                         "as JSONL, in fold order — the parity replay "
+                         "input")
+    ap.add_argument("--replay-journal", default=None,
+                    help="re-fold a recorded journal in-process from the "
+                         "seeded datasets and report params_sha256 "
+                         "(ignores --transport)")
     # run bounds (a service has no natural end; at least one must bind)
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--max-events", type=int, default=None)
     ap.add_argument("--max-time", type=float, default=None,
-                    help="sim-time horizon")
+                    help="sim-time horizon (inproc only)")
     ap.add_argument("--json", action="store_true",
                     help="dump the full metrics dict as JSON")
-    # observability (DESIGN.md §9)
-    ap.add_argument("--log-level", default="info",
-                    help="debug/info/warning/error (obs.configure_logging)")
-    ap.add_argument("--trace-out", default=None,
-                    help="write Chrome-trace-event JSON of the round "
-                         "lifecycle here (perfetto-loadable)")
-    ap.add_argument("--metrics-out", default=None,
-                    help="append JSONL metrics snapshots here "
-                         "(coordinator-gated)")
-    ap.add_argument("--flush-every", type=int, default=8,
-                    help="rounds between metrics-out snapshots")
-    ap.add_argument("--profile-dir", default=None,
-                    help="jax.profiler capture directory (windowed)")
-    ap.add_argument("--profile-every", type=int, default=0,
-                    help="rounds between device-profile windows (0 = off)")
-    ap.add_argument("--profile-window", type=int, default=1,
-                    help="rounds each device-profile window stays open")
-    args = ap.parse_args()
+    add_obs_flags(ap)
+    return ap
 
-    configure_logging(args.log_level)
-    registry = MetricsRegistry()
-    tracer = Tracer(enabled=bool(args.trace_out))
-    profiler = WindowedProfiler(args.profile_dir, every=args.profile_every,
-                                window=args.profile_window)
-    sink = JsonlSink(args.metrics_out) if args.metrics_out else None
+
+def _attach_journal(ctrl: ServingController, f: TextIO) -> None:
+    """Journal every fold, in fold order. Runs on the aggregator thread
+    (pump's single owner), so plain writes are race-free."""
+    from repro.transport import wire
+
+    def hook(upload, tau: int) -> None:
+        f.write(json.dumps({
+            "cid": int(upload.client_id), "seq": int(upload.seq),
+            "base_version": int(upload.base_version), "tau": int(tau),
+            "sent_at": float(upload.sent_at),
+            "sha": wire.payload_sha256(upload)}) + "\n")
+
+    ctrl.fold_hook = hook
+
+
+def replay_journal(path: str, ctrl: ServingController, clients,
+                   fl: FLConfig) -> int:
+    """Re-fold a recorded journal from the seeded datasets.
+
+    Each entry's upload is reconstructed via the shared ``draw_upload``
+    (skipped seqs — uploads that were drawn but never folded, e.g.
+    dropped as stale — consume their dataset draws and are discarded),
+    sha-verified against the journal, then offered + pumped with a
+    FIXED K, reproducing the live run's fold order and taus exactly.
+    Returns the number of folds replayed.
+    """
+    drawn = [0] * len(clients)
+    folded = 0
+    with open(path) as f:
+        for line in f:
+            e = json.loads(line)
+            cid, seq = int(e["cid"]), int(e["seq"])
+            ds = clients[cid]
+            # burn the client's skipped draws so seq-th draw aligns
+            while drawn[cid] < seq:
+                draw_upload(ds, cid, fl, base_version=0, t=0.0)
+                drawn[cid] += 1
+            if drawn[cid] > seq:
+                raise ValueError(
+                    f"journal out of order: client {cid} seq {seq} after "
+                    f"{drawn[cid]} draws")
+            up = draw_upload(ds, cid, fl,
+                             base_version=int(e["base_version"]),
+                             t=float(e["sent_at"]), seq=seq)
+            drawn[cid] += 1
+            from repro.transport import wire
+            sha = wire.payload_sha256(up)
+            if sha != e["sha"]:
+                raise ValueError(
+                    f"journal sha mismatch for client {cid} seq {seq}: "
+                    f"replay {sha[:12]} != recorded {e['sha'][:12]} "
+                    "(seed/scenario/flags differ from the live run?)")
+            adm = ctrl.offer(up, float(e["sent_at"]))
+            if not adm.accepted:
+                raise ValueError(
+                    f"replay rejected client {cid} seq {seq} "
+                    f"({adm.reason}); the live run folded it — config "
+                    "mismatch")
+            ctrl.pump(float(e["sent_at"]))
+            folded += 1
+    return folded
+
+
+def _write_port_file(path: str, port: int) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(str(port))
+    os.replace(tmp, path)  # atomic: readers never see a partial write
+
+
+def main() -> None:
+    args = build_parser().parse_args()
+    obs = ObsStack.from_args(args)
 
     fl = FLConfig(num_clients=args.clients, buffer_size=args.buffer_k,
                   max_staleness=args.max_staleness,
@@ -132,53 +210,117 @@ def main() -> None:
     clients, _ = sc.make_dataset(args.clients,
                                  samples_per_client=args.samples_per_client,
                                  seed=args.seed)
-    behavior = sc.behavior(args.clients, seed=args.seed)
 
     params = init_lenet(jax.random.PRNGKey(args.seed))
+
+    if args.replay_journal:
+        # parity replay is in-process by construction: fixed K, free
+        # service, fold-per-offer — the journal IS the event stream
+        cfg = ServeConfig(queue_capacity=args.queue_capacity,
+                          service_time=0.0,
+                          target_round_latency=args.target_latency,
+                          k_min=args.k_min, k_max=args.k_max,
+                          adapt_every=0)
+        ctrl = ServingController(lenet_loss, params, fl, cfg,
+                                 registry=obs.registry, tracer=obs.tracer)
+        t0 = time.perf_counter()
+        folded = replay_journal(args.replay_journal, ctrl, clients, fl)
+        out = ctrl.snapshot()
+        out["seconds"] = time.perf_counter() - t0
+        out["replayed"] = folded
+        _finish(args, obs, ctrl, out)
+        return
+
     ctrl = ServingController(lenet_loss, params, fl, cfg,
-                             registry=registry, tracer=tracer)
+                             registry=obs.registry, tracer=obs.tracer)
+    journal = open(args.journal_out, "w") if args.journal_out else None
+    if journal is not None:
+        _attach_journal(ctrl, journal)
+
+    try:
+        if args.transport == "inproc":
+            out = _serve_inproc(args, obs, ctrl, sc, clients, fl)
+        else:
+            out = _serve_transport(args, obs, ctrl)
+    finally:
+        if journal is not None:
+            journal.close()
+            logger.info("fold journal -> %s", args.journal_out)
+    _finish(args, obs, ctrl, out)
+
+
+def _serve_inproc(args, obs: ObsStack, ctrl: ServingController, sc,
+                  clients, fl: FLConfig) -> Dict[str, Any]:
+    behavior = sc.behavior(args.clients, seed=args.seed)
     gen = TrafficGenerator(clients, behavior, fl)
-
-    def round_hook(version: int) -> None:
-        profiler.on_round(version)
-        if sink is not None and args.flush_every \
-                and version % args.flush_every == 0:
-            emit_snapshot(sink, registry, version=version)
-            sink.flush()
-
     logger.info("serving scenario=%s clients=%d weighting=%s K0=%d "
                 "target_latency=%s", sc.name, args.clients, args.weighting,
                 ctrl.k, args.target_latency)
     t0 = time.perf_counter()
     out = serve_stream(ctrl, gen, max_rounds=args.rounds,
                        max_events=args.max_events, max_time=args.max_time,
-                       round_hook=round_hook)
+                       round_hook=obs.round_hook)
     dt = time.perf_counter() - t0
     out["seconds"] = dt
     out["uploads_per_sec"] = out["folded"] / dt if dt > 0 else 0.0
-
-    logger.info("%d rounds / %d uploads folded in %.2fs -> %.1f uploads/s",
-                out["rounds"], out["folded"], dt, out["uploads_per_sec"])
-    logger.info("round latency p50=%.3fs p99=%.3fs (sim), cadence "
-                "mean=%.3fs, arrival rate=%.2f/s, K -> %d",
-                out["round_latency_p50"], out["round_latency_p99"],
-                out["round_cadence_mean"], out["arrival_rate"], out["k"])
     logger.info("admission: admitted=%d queue_full=%d stale_ingress=%d "
                 "stale_queue=%d lost=%d retries=%d queue_depth_max=%d",
                 out["admitted"], out["rejected_queue_full"],
                 out["dropped_stale_ingress"], out["dropped_stale_queue"],
                 out["lost_in_transit"], out["retries_scheduled"],
                 out["queue_depth_max"])
+    return out
 
-    profiler.close()
-    if sink is not None:
-        emit_snapshot(sink, registry, version=ctrl.version, final=True)
-        sink.close()
-        logger.info("metrics JSONL -> %s", args.metrics_out)
-    if args.trace_out:
-        tracer.write(args.trace_out)
-        logger.info("chrome trace (%d events) -> %s", len(tracer.events),
-                    args.trace_out)
+
+def _serve_transport(args, obs: ObsStack,
+                     ctrl: ServingController) -> Dict[str, Any]:
+    from repro.transport.server import AggregatorServer
+
+    srv = AggregatorServer(ctrl, transport=args.transport, host=args.host,
+                           port=args.port, registry=obs.registry,
+                           tracer=obs.tracer)
+    if args.port_file:
+        _write_port_file(args.port_file, srv.port)
+    srv.start()
+    logger.info("serving %s on %s:%d until version >= %d%s",
+                args.transport, args.host, srv.port, args.rounds,
+                f" or {args.max_wall_time}s" if args.max_wall_time else "")
+    t0 = time.perf_counter()
+
+    def stop() -> bool:
+        if ctrl.version >= args.rounds:
+            return True
+        return bool(args.max_wall_time
+                    and time.perf_counter() - t0 > args.max_wall_time)
+
+    try:
+        srv.serve(stop=stop, round_hook=obs.round_hook)
+    finally:
+        srv.shutdown()
+    dt = time.perf_counter() - t0
+    out = ctrl.snapshot()
+    out["seconds"] = dt
+    out["uploads_per_sec"] = out["folded"] / dt if dt > 0 else 0.0
+    out["transport"] = args.transport
+    out["port"] = srv.port
+    return out
+
+
+def _finish(args, obs: ObsStack, ctrl: ServingController,
+            out: Dict[str, Any]) -> None:
+    from repro.transport import wire
+
+    version, params = ctrl.pull()
+    out["params_sha256"] = wire.params_sha256(version, params)
+    logger.info("%d rounds / %d uploads folded in %.2fs -> %.1f uploads/s",
+                out["rounds"], out["folded"], out["seconds"],
+                out.get("uploads_per_sec", 0.0))
+    logger.info("round latency p50=%.3fs p99=%.3fs, cadence mean=%.3fs, "
+                "arrival rate=%.2f/s, K -> %d; params_sha256=%s",
+                out["round_latency_p50"], out["round_latency_p99"],
+                out["round_cadence_mean"], out["arrival_rate"], out["k"],
+                out["params_sha256"][:16])
+    obs.finish(ctrl.version)
     if args.json:
         print(json.dumps(out, indent=2))
 

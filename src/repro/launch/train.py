@@ -28,6 +28,12 @@ from repro.configs.base import smoke_variant
 from repro.core.cohort import init_cohort_state, make_cohort_step
 from repro.core.simulator import LatencyModel
 from repro.data.synthetic import make_lm_token_stream
+from repro.launch.cli import (
+    ObsStack,
+    add_obs_flags,
+    add_ring_codec_flag,
+    add_seed_flag,
+)
 from repro.launch.mesh import batch_axes_for, make_host_mesh
 from repro.models.model import build_model
 
@@ -89,11 +95,10 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--weighting", default="paper")
-    ap.add_argument("--ring-codec", default="f32",
-                    choices=("f32", "int8", "delta"),
-                    help="version-store codec (core/version_store.py, "
-                         "DESIGN.md §11) — int8/delta shrink the R-deep "
-                         "version ring for large models")
+    add_seed_flag(ap)
+    add_ring_codec_flag(
+        ap, help_suffix=" — int8/delta shrink the R-deep version ring "
+                        "for large models")
     ap.add_argument("--ckpt", default=None,
                     help="checkpoint path (coordinator-gated: only "
                          "process 0 writes)")
@@ -103,12 +108,10 @@ def main() -> None:
                     help="host:port of process 0 (enables jax.distributed)")
     ap.add_argument("--num-processes", type=int, default=1)
     ap.add_argument("--process-id", type=int, default=0)
-    ap.add_argument("--log-level", default="info",
-                    help="debug/info/warning/error (obs.configure_logging)")
+    add_obs_flags(ap)
     args = ap.parse_args()
 
-    from repro.obs import configure_logging
-    configure_logging(args.log_level)
+    obs = ObsStack.from_args(args)
 
     if args.coordinator and args.num_processes > 1:
         from repro.launch.multihost import initialize
@@ -124,11 +127,12 @@ def main() -> None:
                   weighting=args.weighting, ring_codec=args.ring_codec)
     model = build_model(cfg)
     mesh = make_host_mesh()
-    latency = LatencyModel.heterogeneous(cohort, seed=0)
-    sched = arrival_schedule(cohort, args.buffer_k, latency, args.rounds)
+    latency = LatencyModel.heterogeneous(cohort, seed=args.seed)
+    sched = arrival_schedule(cohort, args.buffer_k, latency, args.rounds,
+                             seed=args.seed)
 
-    rng = np.random.default_rng(0)
-    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(args.seed)
+    params = model.init(jax.random.PRNGKey(args.seed))
     state = init_cohort_state(params, cohort)
     step = jax.jit(make_cohort_step(model.loss, fl), donate_argnums=0)
     sizes = jnp.asarray(rng.integers(500, 2000, cohort), jnp.float32)
@@ -136,7 +140,8 @@ def main() -> None:
     from repro.launch.program import make_io_hooks
     log, eval_metrics, maybe_save = make_io_hooks(
         ckpt_path=args.ckpt, ckpt_every=args.ckpt_every,
-        log_fn=logging.getLogger("repro.launch.train").info)
+        log_fn=logging.getLogger("repro.launch.train").info,
+        registry=obs.registry, tracer=obs.tracer, sink=obs.sink)
 
     with mesh:
         for r in range(args.rounds):
@@ -152,7 +157,9 @@ def main() -> None:
                 f"arrivals={int(sched[r].sum())} ({time.time() - t0:.1f}s)")
             maybe_save(r + 1, {"params": state.global_params,
                                "version": state.version})
+            obs.round_hook(r + 1)
     log(f"done; global version = {int(state.version)}")
+    obs.finish(args.rounds)
 
 
 if __name__ == "__main__":

@@ -10,6 +10,8 @@ taxonomy is fixed (DESIGN.md §9) so traces from every runner line up:
     apply            the jitted round dispatch (engine chunk / eq. 5)
     host_sync        device -> host fetches (round log, eval metrics)
     checkpoint       state capture + write
+    transport_decode wire-frame decode on a transport worker (§12)
+    transport_offer  admission call on a transport worker (decode->offer)
 
 Each span also opens a ``jax.profiler.TraceAnnotation`` (when jax is
 importable and the profiler is active), so a device profile collected by
@@ -35,8 +37,10 @@ SPAN_CONTRIBUTE = "contribute"
 SPAN_APPLY = "apply"
 SPAN_HOST_SYNC = "host_sync"
 SPAN_CHECKPOINT = "checkpoint"
+SPAN_TRANSPORT_DECODE = "transport_decode"
+SPAN_TRANSPORT_OFFER = "transport_offer"
 SPAN_NAMES = (SPAN_COLLECT, SPAN_CONTRIBUTE, SPAN_APPLY, SPAN_HOST_SYNC,
-              SPAN_CHECKPOINT)
+              SPAN_CHECKPOINT, SPAN_TRANSPORT_DECODE, SPAN_TRANSPORT_OFFER)
 
 
 def _annotation(name: str):

@@ -37,8 +37,33 @@ from repro.core.serving import Admission, REJECT_QUEUE_FULL, Upload
 from repro.sim.scenarios import ClientBehavior
 
 
+def draw_upload(ds, cid: int, fl: FLConfig, *, base_version: int,
+                t: float, seq: int = -1) -> Upload:
+    """One local round: the client's next seeded batch draw as an Upload.
+
+    THE shared draw (DESIGN.md §12): this in-process twin, the real
+    socket clients (``transport/client.py``), and the loopback-parity
+    journal replay (``launch/serve_fl.py --replay-journal``) all
+    materialize uploads through it, so a client's seq-th upload is
+    bit-identical everywhere. ``seq`` counts the client's dataset draw
+    pairs (dropped-in-transit events consume NO draws).
+    """
+    batch = ds.batches(fl.batch_size, fl.local_steps)
+    probe = ds.batch(fl.batch_size)
+    return Upload(client_id=cid, base_version=int(base_version),
+                  data_size=float(ds.size), batch=batch, probe=probe,
+                  sent_at=t, seq=seq)
+
+
 class TrafficGenerator:
-    """Scenario-driven arrival stream with retry/re-pull bookkeeping."""
+    """Scenario-driven arrival stream with retry/re-pull bookkeeping.
+
+    Together with ``core.serving.serve_stream`` this is the
+    deterministic in-process twin of the socket path: the same uploads
+    a real client fleet would push through ``transport/`` arrive on the
+    scenario's seeded sim clock instead — the CI path the loopback
+    parity gate compares the transport against.
+    """
 
     def __init__(self, clients: Sequence, behavior: ClientBehavior,
                  fl: FLConfig):
@@ -47,6 +72,7 @@ class TrafficGenerator:
         self.fl = fl
         n = len(clients)
         self.base_version = np.zeros(n, np.int64)
+        self.upload_seq = np.zeros(n, np.int64)  # per-client draw index
         self.pending: Dict[int, Upload] = {}  # cid -> upload awaiting retry
         self.lost = 0  # scenario dropouts (upload never reached the server)
         self.retries = 0  # queue-full re-offers scheduled
@@ -80,13 +106,11 @@ class TrafficGenerator:
             self.lost += 1
             self.repull(cid, t, version)
             return None
-        ds = self.clients[cid]
-        batch = ds.batches(self.fl.batch_size, self.fl.local_steps)
-        probe = ds.batch(self.fl.batch_size)
-        return Upload(client_id=cid,
-                      base_version=int(self.base_version[cid]),
-                      data_size=float(ds.size), batch=batch, probe=probe,
-                      sent_at=t)
+        seq = int(self.upload_seq[cid])
+        self.upload_seq[cid] += 1
+        return draw_upload(self.clients[cid], cid, self.fl,
+                           base_version=int(self.base_version[cid]),
+                           t=t, seq=seq)
 
     def settle(self, cid: int, t: float, adm: Admission, version: int,
                upload: Upload) -> None:

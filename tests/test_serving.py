@@ -116,6 +116,19 @@ class TestAdmissionControl:
         with pytest.raises(ValueError, match="k_min"):
             self._ctrl(k_min=4, k_max=2)
 
+    def test_retry_after_clamped_to_max(self):
+        """A deep queue with slow service would hint hours of backoff;
+        the Admission contract clamps it to retry_after_max so clients
+        re-probe on a bounded cadence."""
+        ctrl, _ = self._ctrl(queue_capacity=8, service_time=10.0,
+                             adapt_every=0, retry_after_max=5.0)
+        for i in range(8):
+            assert ctrl.offer(_upload(ctrl, i, t=0.0), now=0.0).accepted
+        adm = ctrl.offer(_upload(ctrl, 9, t=0.0), now=0.0)
+        assert not adm.accepted and adm.reason == REJECT_QUEUE_FULL
+        # unclamped hint would be 8 * 10.0 = 80s of modeled drain
+        assert adm.retry_after == 5.0
+
 
 class TestAdaptiveK:
     def test_k_settles_to_arrival_rate_times_target(self):
@@ -304,3 +317,61 @@ class TestServeStream:
         ctrl = ServingController(_quad_loss, PARAMS, fl, ServeConfig())
         with pytest.raises(ValueError, match="max_rounds"):
             serve_stream(ctrl, object())
+
+
+class TestOverloadRetry:
+    """Backpressure end to end through TrafficGenerator: every
+    queue_full rejection is re-offered after EXACTLY the hinted delay
+    with the SAME (now staler) payload, and every offer lands in exactly
+    one admission counter."""
+
+    def test_rejections_reoffered_at_hint_with_same_payload(self):
+        sc = get_scenario("paper-fig1")
+        n = 4
+        clients, _ = sc.make_dataset(n, samples_per_client=16, seed=0)
+        fl = FLConfig(num_clients=n, buffer_size=2, max_staleness=100,
+                      local_steps=1, batch_size=4)
+
+        def loss(params, batch):
+            x, y = batch
+            x = x.reshape(x.shape[0], -1)
+            return jnp.mean((x @ params["w"] - y) ** 2), {}
+
+        # one queue slot + slow modeled service: arrivals outpace the
+        # fold drain, so the generator's retry path gets exercised hard
+        ctrl = ServingController(
+            loss, {"w": jnp.zeros(784)}, fl,
+            ServeConfig(queue_capacity=1, service_time=0.9,
+                        adapt_every=0, retry_after_min=0.05))
+        gen = TrafficGenerator(clients, sc.behavior(n, seed=0), fl)
+        horizon = 40.0
+        log = []  # (t, cid, upload, admission) for every real offer
+        while not gen.empty():
+            t, cid = gen.pop()
+            if t > horizon:
+                break
+            up = gen.realize(cid, t, ctrl.version)
+            if up is None:
+                continue
+            adm = ctrl.offer(up, t)
+            ctrl.pump(t)
+            log.append((t, cid, up, adm))
+            gen.settle(cid, t, adm, ctrl.version, up)
+
+        rejections = [(i, e) for i, e in enumerate(log)
+                      if e[3].reason == REJECT_QUEUE_FULL]
+        assert len(rejections) >= 3, "config failed to provoke overload"
+        for i, (t, cid, up, adm) in rejections:
+            if t + adm.retry_after > horizon:
+                continue  # retry scheduled past the cut
+            later = [e for e in log[i + 1:] if e[1] == cid]
+            assert later, f"rejection at t={t} never re-offered"
+            rt, _, rup, _ = later[0]
+            assert rup is up  # SAME payload object, held in gen.pending
+            assert rt == t + adm.retry_after  # exact heap arithmetic
+            assert rup.base_version == up.base_version  # staler, not redrawn
+        # reconciliation: offered == admitted + rejected + dropped
+        c = ctrl.counters
+        assert len(log) == (c["admitted"] + c["rejected_queue_full"]
+                            + c["dropped_stale_ingress"])
+        assert gen.retries == len(rejections)

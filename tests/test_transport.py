@@ -1,0 +1,331 @@
+"""Real-transport serving ingress (transport/ + launch/, DESIGN.md §12):
+wire-schema roundtrips and versioning, the AggregatorService protocol
+over real loopback sockets, the §12 acceptance gate — byte-identical
+served params between the in-process twin and the socket path on the
+same seeded stream — journal-replay parity for CONCURRENT client
+fleets, the controller's thread-safety contract, and the shared
+launcher flag surface (no drift between serve_fl and client_fl)."""
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core.serving import (
+    AggregatorService,
+    Admission,
+    ServeConfig,
+    ServingController,
+    Upload,
+    tree_from_wire,
+    tree_to_wire,
+)
+from repro.sim.arrivals import draw_upload
+from repro.transport import wire
+from repro.transport.client import RemoteAggregator, run_client
+from repro.transport.server import AggregatorServer
+
+
+def _quad_loss(params, batch):
+    x, y = batch
+    return jnp.mean((x @ params["w"] - y) ** 2), {}
+
+
+PARAMS = {"w": jnp.array([1.0, -1.0, 0.5, 2.0])}
+
+
+class QuadDataset:
+    """Seeded sequential-draw dataset speaking the ClientDataset batch
+    protocol for the quad problem — re-creatable from (cid,), which is
+    what the journal replay and the parity twin rely on."""
+
+    def __init__(self, cid: int, size: int = 16):
+        self.size = size
+        self._rng = np.random.default_rng(1234 + cid)
+
+    def batch(self, b):
+        x = self._rng.normal(size=(b, 4)).astype(np.float32)
+        y = (x @ np.arange(1.0, 5.0)).astype(np.float32)
+        return jnp.asarray(x), jnp.asarray(y)
+
+    def batches(self, b, m):
+        xs, ys = zip(*[self.batch(b) for _ in range(m)])
+        return jnp.stack(xs), jnp.stack(ys)
+
+
+def _fl(**kw):
+    kw.setdefault("buffer_size", 2)
+    kw.setdefault("local_steps", 1)
+    kw.setdefault("local_lr", 0.1)
+    kw.setdefault("max_staleness", 8)
+    kw.setdefault("batch_size", 4)
+    return FLConfig(**kw)
+
+
+def _ctrl(fl=None, **kw):
+    kw.setdefault("adapt_every", 0)
+    kw.setdefault("service_time", 0.0)
+    return ServingController(_quad_loss, PARAMS, fl or _fl(),
+                             ServeConfig(**kw))
+
+
+class TestWireSchema:
+    def _tensors(self):
+        rng = np.random.default_rng(0)
+        return {"a": rng.normal(size=(3, 5)).astype(np.float32),
+                "b": np.arange(7, dtype=np.int64),
+                "c": rng.normal(size=(4096,)).astype(np.float32)}
+
+    def test_f32_roundtrip_bit_exact(self):
+        meta = {"kind_detail": {"nested": [1, 2.5, "x"], "ok": True}}
+        frame = wire.encode_message("offer", meta, self._tensors())
+        kind, m2, t2 = wire.decode_message(frame)
+        assert kind == "offer" and m2 == meta
+        for name, arr in self._tensors().items():
+            assert t2[name].dtype == arr.dtype
+            np.testing.assert_array_equal(t2[name], arr)
+
+    def test_int8_bounded_error_and_3x_smaller(self):
+        tensors = self._tensors()
+        f32 = wire.encode_message("offer", {}, tensors, codec="f32")
+        i8 = wire.encode_message("offer", {}, tensors, codec="int8")
+        assert len(f32) >= 3 * len(i8) - 200  # the §12 size gate (headers
+        # dominate tiny tensors, hence the small slack)
+        _, _, t2 = wire.decode_message(i8)
+        span = tensors["c"].max() - tensors["c"].min()
+        # per-block affine on 256-wide blocks: error << global-span / 255
+        assert np.abs(t2["c"] - tensors["c"]).max() <= span / 255.0
+        # non-float32 tensors always travel raw, codec notwithstanding
+        np.testing.assert_array_equal(t2["b"], tensors["b"])
+
+    def test_schema_version_mismatch_rejected(self):
+        frame = bytearray(wire.encode_message("offer", {}))
+        frame[2:4] = (wire.SCHEMA_VERSION + 1).to_bytes(2, "big")
+        with pytest.raises(wire.WireError, match="schema"):
+            wire.decode_message(bytes(frame))
+
+    def test_bad_magic_and_truncation_rejected(self):
+        with pytest.raises(wire.WireError):
+            wire.decode_message(b"XX" + b"\x00" * 32)
+        frame = wire.encode_message("offer", {}, self._tensors())
+        with pytest.raises(wire.WireError):
+            wire.decode_message(frame[: len(frame) // 2])
+
+    def test_upload_and_admission_wire_roundtrip(self):
+        ds = QuadDataset(0)
+        up = draw_upload(ds, 0, _fl(), base_version=3, t=1.5, seq=7)
+        meta_w, tensors_w = up.to_wire()
+        frame = wire.encode_message("offer", meta_w, tensors_w)
+        _, meta, tensors = wire.decode_message(frame)
+        up2 = Upload.from_wire(meta, tensors)
+        assert (up2.client_id, up2.base_version, up2.seq) == (0, 3, 7)
+        assert up2.data_size == up.data_size
+        assert wire.payload_sha256(up2) == wire.payload_sha256(up)
+        for a, b in zip(jax.tree_util.tree_leaves(up.batch),
+                        jax.tree_util.tree_leaves(up2.batch)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        adm = Admission(accepted=False, reason="queue_full",
+                        retry_after=1.25)
+        assert Admission.from_wire(adm.to_wire()) == adm
+
+    def test_tree_wire_preserves_tuple_vs_dict(self):
+        tree = {"w": np.ones(3, np.float32),
+                "pair": (np.zeros(2, np.float32), np.ones(2, np.float32))}
+        tensors = {}
+        skel = tree_to_wire("t", tree, tensors)
+        back = tree_from_wire(skel, tensors)
+        assert isinstance(back["pair"], tuple)
+        np.testing.assert_array_equal(back["w"], tree["w"])
+
+
+class TestLoopbackParity:
+    """The §12 acceptance gate: same seeded stream through the
+    in-process controller and through a real socket -> byte-identical
+    served params. Sequential client, the TEST thread owns pump (the
+    single-aggregator-thread contract), so fold order is deterministic
+    on both paths."""
+
+    def _drive(self, service: AggregatorService, pump, ds, fl,
+               uploads=6):
+        for seq in range(uploads):
+            version, _params = service.pull()
+            up = draw_upload(ds, 0, fl, base_version=version,
+                             t=float(seq), seq=seq)
+            adm = service.offer(up, float(seq))
+            assert adm.accepted, adm
+            pump()
+        return service.pull()
+
+    @pytest.mark.parametrize("transport", ["tcp", "http"])
+    def test_socket_params_byte_identical_to_twin(self, transport):
+        fl = _fl()
+        twin = _ctrl(fl)
+        v_twin, p_twin = self._drive(twin, lambda: twin.pump(1e9),
+                                     QuadDataset(0), fl)
+
+        ctrl = _ctrl(fl)
+        srv = AggregatorServer(ctrl, transport=transport)
+        srv.start()
+        try:
+            client = RemoteAggregator("127.0.0.1", srv.port,
+                                      transport=transport, codec="f32")
+            v_sock, p_sock = self._drive(
+                client, lambda: ctrl.pump(srv.clock()), QuadDataset(0), fl)
+            client.close()
+        finally:
+            srv.shutdown()
+
+        assert v_sock == v_twin == 3  # 6 uploads / K=2
+        for a, b in zip(jax.tree_util.tree_leaves(p_twin),
+                        jax.tree_util.tree_leaves(p_sock)):
+            assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+        assert wire.params_sha256(v_sock, p_sock) == \
+            wire.params_sha256(v_twin, p_twin)
+
+    def test_remote_snapshot_matches_controller(self):
+        ctrl = _ctrl()
+        srv = AggregatorServer(ctrl, transport="tcp")
+        srv.start()
+        try:
+            client = RemoteAggregator("127.0.0.1", srv.port)
+            snap = client.snapshot()
+            client.close()
+        finally:
+            srv.shutdown()
+        assert snap["version"] == 0 and snap["k"] == ctrl.k
+
+
+class TestJournalReplayParity:
+    """Concurrent fleets are racy (pull races fold), so live socket runs
+    aren't bit-reproducible run to run — but the fold JOURNAL is the
+    ground truth: replaying it in-process from the seeded datasets must
+    land on the live run's exact params digest."""
+
+    def test_concurrent_clients_replay_to_same_digest(self, tmp_path):
+        from repro.launch.serve_fl import _attach_journal, replay_journal
+
+        fl = _fl(max_staleness=100)
+        rounds, n_clients = 3, 3
+        ctrl = _ctrl(fl, queue_capacity=64)
+        journal = tmp_path / "folds.jsonl"
+        f = open(journal, "w")
+        _attach_journal(ctrl, f)
+        srv = AggregatorServer(ctrl, transport="tcp")
+        srv.start()
+        folder = threading.Thread(
+            target=srv.serve,
+            kwargs={"stop": lambda: ctrl.version >= rounds, "poll": 0.01},
+            daemon=True)
+        folder.start()
+
+        def one_client(cid):
+            svc = RemoteAggregator("127.0.0.1", srv.port, seed=cid)
+            try:
+                run_client(svc, QuadDataset(cid), cid, fl, uploads=8,
+                           stop_at_version=rounds, seed=cid)
+            finally:
+                svc.close()
+
+        threads = [threading.Thread(target=one_client, args=(c,))
+                   for c in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        folder.join(timeout=60)
+        srv.shutdown()
+        f.close()
+        assert not folder.is_alive() and ctrl.version >= rounds
+        entries = [json.loads(line) for line in journal.open()]
+        assert len(entries) >= rounds * fl.buffer_size
+
+        replay = _ctrl(fl, queue_capacity=64)
+        folded = replay_journal(str(journal), replay,
+                                [QuadDataset(c) for c in range(n_clients)],
+                                fl)
+        assert folded == len(entries)
+        assert wire.params_sha256(*replay.pull()) == \
+            wire.params_sha256(*ctrl.pull())
+
+    def test_replay_detects_wrong_seed(self, tmp_path):
+        from repro.launch.serve_fl import _attach_journal, replay_journal
+
+        fl = _fl()
+        ctrl = _ctrl(fl)
+        journal = tmp_path / "folds.jsonl"
+        with open(journal, "w") as f:
+            _attach_journal(ctrl, f)
+            up = draw_upload(QuadDataset(0), 0, fl, base_version=0, t=0.0,
+                             seq=0)
+            assert ctrl.offer(up, 0.0).accepted
+            ctrl.pump(0.0)
+        with pytest.raises(ValueError, match="sha mismatch"):
+            replay_journal(str(journal), _ctrl(fl), [QuadDataset(99)], fl)
+
+
+class TestThreadSafety:
+    def test_concurrent_offers_reconcile(self):
+        """The documented contract: offer/pull/snapshot from many
+        threads while ONE thread pumps; every offer lands in exactly one
+        counter and the served (version, params) pair stays coherent."""
+        fl = _fl(max_staleness=1000)
+        ctrl = _ctrl(fl, queue_capacity=16)
+        per_thread, n_threads = 30, 4
+        errors = []
+
+        def hammer(tid):
+            ds = QuadDataset(tid)
+            try:
+                for i in range(per_thread):
+                    up = draw_upload(ds, tid, fl, base_version=0, t=0.0,
+                                     seq=i)
+                    ctrl.offer(up, 0.0)
+                    v, p = ctrl.pull()
+                    assert v >= 0 and p is not None
+                    ctrl.snapshot()
+            except Exception as e:  # pragma: no cover - failure path
+                errors.append(e)
+
+        threads = [threading.Thread(target=hammer, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        while any(t.is_alive() for t in threads):
+            ctrl.pump(0.0)
+        for t in threads:
+            t.join()
+        ctrl.pump(0.0)
+        assert not errors
+        c = ctrl.counters
+        assert c["admitted"] + c["rejected_queue_full"] \
+            + c["dropped_stale_ingress"] == per_thread * n_threads
+        assert c["folded"] == c["admitted"]  # queue fully drained
+        assert ctrl.version == c["folded"] // ctrl.k
+
+
+class TestLauncherFlagSurface:
+    def test_shared_flags_cannot_drift(self):
+        """serve_fl and client_fl build their parsers from launch/cli.py;
+        the shared option strings must exist on both with equal
+        defaults."""
+        from repro.launch import client_fl, serve_fl
+
+        sp = serve_fl.build_parser()._option_string_actions
+        cp = client_fl.build_parser()._option_string_actions
+        shared = ("--scenario", "--clients", "--samples-per-client",
+                  "--seed", "--log-level", "--trace-out", "--metrics-out",
+                  "--flush-every", "--profile-dir", "--profile-every",
+                  "--profile-window")
+        for opt in shared:
+            assert opt in sp, f"serve_fl lost {opt}"
+            assert opt in cp, f"client_fl lost {opt}"
+            assert sp[opt].default == cp[opt].default, opt
+
+    def test_ring_codec_choices_shared(self):
+        from repro.launch import serve_fl
+
+        act = serve_fl.build_parser()._option_string_actions["--ring-codec"]
+        assert tuple(act.choices) == ("f32", "int8", "delta")
